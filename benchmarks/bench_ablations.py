@@ -1,0 +1,102 @@
+"""Ablations over HiCS-FL's hyper-parameters (the knobs App. A.1.2
+fixes): λ (distance mixing), T (softmax temperature), γ⁰ (annealing).
+
+  λ  — cluster purity: fraction of balanced clients isolated from
+       imbalanced ones at M=2 under the Eq. 9 distance
+  T  — corr(Ĥ, H_true) of the estimator across 3 orders of magnitude
+  γ⁰ — early-round accuracy of the full federated loop
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import md_table, save_result
+from repro.core import (agglomerate, distance_matrix, estimate_entropy,
+                        expected_bias_update, label_entropy)
+from repro.data import SyntheticSpec
+from repro.fed import ExperimentSpec, LocalSpec, run_experiment
+
+
+def _cohort_db(rng, n=40, c=10, frac_bal=0.25, scale=0.025):
+    n_bal = int(n * frac_bal)
+    dists = np.concatenate([
+        np.stack([rng.dirichlet(np.full(c, 0.01))
+                  for _ in range(n - n_bal)]),
+        np.stack([rng.dirichlet(np.full(c, 10.0)) for _ in range(n_bal)]),
+    ])
+    e = jnp.full(c, 0.1)
+    db = np.array(expected_bias_update(jnp.asarray(dists), e, scale, 2))
+    db += rng.normal(0, 1e-4, db.shape)
+    return dists, db, n - n_bal
+
+
+def lam_ablation(rng) -> list:
+    dists, db, n_imb = _cohort_db(rng)
+    rows = []
+    for lam in (0.0, 1.0, 10.0, 100.0):
+        d = np.asarray(distance_matrix(jnp.asarray(db), 0.0025, lam))
+        labels = agglomerate(d, 2, linkage="ward")
+        # purity: balanced clients share one label not used by imbalanced
+        bal = labels[n_imb:]
+        imb = labels[:n_imb]
+        pure = (len(set(bal)) == 1) and not (set(bal) & set(imb))
+        # soft metric: majority-side fraction
+        maj = max((bal == v).mean() for v in set(bal))
+        rows.append((lam, bool(pure), float(maj)))
+    return rows
+
+
+def temp_ablation(rng) -> list:
+    dists, db, _ = _cohort_db(rng)
+    h_true = np.asarray(label_entropy(jnp.asarray(dists)))
+    rows = []
+    for t in (0.0005, 0.0025, 0.01, 0.05, 0.25):
+        h = np.asarray(estimate_entropy(jnp.asarray(db), t))
+        rows.append((t, float(np.corrcoef(h, h_true)[0, 1]),
+                     float(np.ptp(h))))
+    return rows
+
+
+def gamma_ablation(rounds=30) -> list:
+    rows = []
+    for g0 in (0.0, 1.0, 4.0, 8.0):
+        accs = []
+        for seed in (0,):
+            spec = ExperimentSpec(
+                arch="paper-mlp", num_clients=30, num_select=3,
+                rounds=rounds, alphas=(0.001, 0.01, 0.5),
+                selector="hics",
+                selector_kw={"temperature": 0.63, "gamma0": g0,
+                             "normalize": True},
+                data=SyntheticSpec(noise=0.5, proto_scale=1.2),
+                local=LocalSpec(algo="fedavg", optimizer="sgd", lr=0.05,
+                                epochs=2, batch_size=32),
+                samples_train=4000, samples_test=1000, eval_every=5,
+                seed=seed)
+            hist = run_experiment(spec)
+            accs.append(hist["test_acc"])
+        m = np.mean(np.asarray(accs), axis=0)
+        rows.append((g0, float(m[len(m) // 2]), float(m[-1])))
+    return rows
+
+
+def main(quick: bool = True):
+    print("== bench_ablations (λ / T / γ⁰) ==", flush=True)
+    rng = np.random.default_rng(0)
+    lam = lam_ablation(rng)
+    print(md_table(["λ", "pure split @M=2", "majority frac"],
+                   [(l, p, f"{m:.2f}") for l, p, m in lam]))
+    temp = temp_ablation(np.random.default_rng(0))
+    print(md_table(["T", "corr(Ĥ, H)", "Ĥ range"],
+                   [(t, f"{c:.3f}", f"{r:.2f}") for t, c, r in temp]))
+    gam = gamma_ablation(rounds=20 if quick else 60)
+    print(md_table(["γ⁰", "mid-run acc", "final acc"],
+                   [(g, f"{a:.3f}", f"{b:.3f}") for g, a, b in gam]))
+    save_result("ablations", {"lambda": lam, "temperature": temp,
+                              "gamma0": gam})
+    return {"lambda": lam, "temperature": temp, "gamma0": gam}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Kernel-level benchmark: validates the Pallas kernels at LLM-head
+scale (the framework's §3.2 hot spots) and times the CPU oracle paths.
+
+Wall-times here are CPU reference numbers (interpret-mode Pallas is a
+correctness tool, not a performance path); the TPU performance story is
+the roofline analysis in bench_roofline.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_result
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.hetero_entropy import entropy_pallas
+from repro.kernels.pairwise import pairwise_distance_pallas
+
+
+def main(quick: bool = True):
+    print("== bench_kernels ==", flush=True)
+    rng = np.random.default_rng(0)
+    out = {}
+
+    # entropy at vocab scale: N=64 clients x C=32k classes
+    n, c = (64, 32_768) if quick else (256, 151_936)
+    x = jnp.asarray(rng.normal(size=(n, c)) * 0.01, jnp.float32)
+    t0 = time.perf_counter()
+    want = ref.entropy_ref(x, 0.0025).block_until_ready()
+    t_ref = time.perf_counter() - t0
+    got = entropy_pallas(x, 0.0025, interpret=True)
+    err = float(jnp.max(jnp.abs(got - want)))
+    out["entropy"] = {"n": n, "c": c, "max_err": err,
+                      "ref_seconds": t_ref}
+    print(f"  entropy N={n} C={c}: ref {t_ref*1e3:.1f} ms, "
+          f"kernel-vs-ref err {err:.2e}", flush=True)
+    assert err < 1e-3
+
+    # pairwise Eq. 9 at the same scale
+    h = ref.entropy_ref(x, 0.0025)
+    norms = jnp.linalg.norm(x, axis=-1)
+    t0 = time.perf_counter()
+    want_d = ref.pairwise_distance_ref(x, h, 10.0).block_until_ready()
+    t_ref = time.perf_counter() - t0
+    got_d = pairwise_distance_pallas(x, norms, h, lam=10.0,
+                                     interpret=True)
+    errd = float(jnp.max(jnp.abs(got_d - want_d)))
+    out["pairwise"] = {"n": n, "c": c, "max_err": errd,
+                       "ref_seconds": t_ref}
+    print(f"  pairwise N={n} C={c}: ref {t_ref*1e3:.1f} ms, "
+          f"err {errd:.2e}", flush=True)
+    assert errd < 5e-3
+
+    # decode attention at serving scale (reduced when quick)
+    b, hq, kv, dh, s = (2, 8, 2, 64, 4096) if quick \
+        else (8, 32, 8, 128, 32_768)
+    q = jnp.asarray(rng.normal(size=(b, hq, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, dh)), jnp.float32)
+    t0 = time.perf_counter()
+    want_a = ref.decode_attention_ref(q, k, v, s).block_until_ready()
+    t_ref = time.perf_counter() - t0
+    got_a = decode_attention_pallas(q, k, v, s, interpret=True)
+    erra = float(jnp.max(jnp.abs(got_a - want_a)))
+    out["decode_attention"] = {"b": b, "h": hq, "kv": kv, "dh": dh,
+                               "s": s, "max_err": erra,
+                               "ref_seconds": t_ref}
+    print(f"  decode-attn B={b} H={hq} S={s}: ref {t_ref*1e3:.1f} ms, "
+          f"err {erra:.2e}", flush=True)
+    assert erra < 1e-3
+
+    save_result("kernels", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

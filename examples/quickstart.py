@@ -1,0 +1,68 @@
+"""Quickstart: HiCS-FL in ~60 seconds on CPU.
+
+Runs a 50-client federated classification experiment (the paper's
+FMNIST-style setting (1): 80% of clients severely imbalanced, 20%
+balanced) with HiCS-FL selection, then prints the estimated-vs-true
+entropy table and the accuracy trajectory vs random sampling.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import label_entropy
+from repro.data import SyntheticSpec
+from repro.fed import (ExperimentSpec, LocalSpec, build,
+                       rounds_to_accuracy)
+
+import jax.numpy as jnp
+
+ROUNDS = 40
+
+
+def run(selector, selector_kw=None, seed=0):
+    spec = ExperimentSpec(
+        arch="paper-mlp", num_clients=50, num_select=5, rounds=ROUNDS,
+        alphas=(0.001, 0.002, 0.005, 0.01, 0.5),   # paper setting (1)
+        selector=selector, selector_kw=selector_kw,
+        data=SyntheticSpec(noise=0.5, proto_scale=1.2),
+        local=LocalSpec(algo="fedavg", optimizer="sgd", lr=0.05,
+                        epochs=2, batch_size=32),
+        samples_train=10_000, samples_test=2_000, eval_every=5,
+        seed=seed)
+    server, info = build(spec)
+    hist = server.run()
+    return server, info, hist
+
+
+def main():
+    print("=== HiCS-FL quickstart: setting (1), 50 clients, K=5 ===\n")
+    server, info, hist = run(
+        "hics", {"temperature": 0.63, "gamma0": 4.0, "normalize": True})
+
+    # estimated vs true heterogeneity (the paper's core estimator)
+    ent_hat = server.selector.estimated_entropies()
+    ent_true = np.asarray(label_entropy(jnp.asarray(info["label_dists"])))
+    corr = np.corrcoef(ent_hat, ent_true)[0, 1]
+    print(f"Ĥ(softmax(Δb/T)) vs H(D): Pearson r = {corr:.3f}")
+    order = np.argsort(-ent_hat)[:8]
+    print("  top-8 estimated-entropy clients "
+          f"(α of each): {[info['client_alpha'][i] for i in order]}")
+    print("   -> the balanced (α=0.5) clients float to the top\n")
+
+    print("accuracy trajectory (HiCS-FL):",
+          [round(a, 3) for a in hist["test_acc"]])
+    _, _, hist_rand = run("random")
+    print("accuracy trajectory (random) :",
+          [round(a, 3) for a in hist_rand["test_acc"]])
+    for target in (0.4, 0.5):
+        rh = rounds_to_accuracy(hist, target)
+        rr = rounds_to_accuracy(hist_rand, target)
+        if rh and rr:
+            print(f"rounds to {target:.0%}: HiCS-FL {rh} vs random {rr} "
+                  f"({rr/rh:.1f}x speedup)")
+    print(f"\nselection overhead: {server.selector.select_seconds*1e3:.1f} ms"
+          f" total across {ROUNDS} rounds (O(C) server-side)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Batched serving example: prefill + decode with any assigned arch, and
+a direct comparison of the decode hot loop against the GQA flash-decode
+Pallas kernel (interpret mode on CPU; compiled on TPU).
+
+  PYTHONPATH=src python examples/serve_batched.py --arch mixtral-8x22b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.kernels import gqa_decode_attention
+from repro.kernels.ref import decode_attention_ref
+from repro.launch.steps import make_prefill_step, make_serve_step
+from repro.models import get_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    B, S = args.batch, args.prompt_len
+    if cfg.kind == "vlm":
+        P = cfg.vlm.num_patches
+        batch = {"patches": jnp.asarray(
+            rng.normal(size=(B, P, cfg.vlm.patch_embed_dim)), jnp.float32),
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                               (B, S - P)), jnp.int32)}
+    elif cfg.kind == "audio":
+        F = min(cfg.encdec.max_source_frames, S)
+        batch = {"frames": jnp.asarray(rng.normal(size=(B, F, cfg.d_model)),
+                                       jnp.float32),
+                 "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                                    (B, S)), jnp.int32)}
+    else:
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                                    (B, S)), jnp.int32)}
+
+    prefill = jax.jit(make_prefill_step(api, dtype=jnp.float32,
+                                        cache_extra=args.gen))
+    serve = jax.jit(make_serve_step(api, dtype=jnp.float32),
+                    donate_argnums=(1,))
+    token, cache = prefill(params, batch)
+    token.block_until_ready()
+    t0 = time.time()
+    toks = [np.asarray(token)]
+    for i in range(args.gen - 1):
+        token, cache = serve(params, cache,
+                             {"token": token,
+                              "pos": jnp.asarray(S + i, jnp.int32)})
+        toks.append(np.asarray(token))
+    token.block_until_ready()
+    dt = (time.time() - t0) / max(1, args.gen - 1)
+    print(f"{cfg.name}: batch={B} prompt={S} -> {args.gen} tokens, "
+          f"{dt*1e3:.1f} ms/token (CPU, reduced config)")
+    print("sample:", np.concatenate(toks, 1)[0][:12].tolist())
+
+    # decode-attention kernel vs oracle on this arch's GQA geometry
+    if cfg.num_heads:
+        H, KV, dh = cfg.num_heads, max(cfg.num_kv_heads, 1), \
+            cfg.resolved_head_dim()
+        s = 512
+        q = jnp.asarray(rng.normal(size=(B, H, dh)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, s, KV, dh)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, s, KV, dh)), jnp.float32)
+        got = gqa_decode_attention(q, k, v, s, use_pallas=True)
+        want = decode_attention_ref(q, k, v, s)
+        err = float(jnp.max(jnp.abs(got - want)))
+        print(f"flash-decode kernel (H={H} KV={KV} dh={dh} S={s}): "
+              f"max|Δ| vs oracle = {err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.checkpoint.npz import (latest_step, load_pytree, restore,
+                                  save_pytree)
+
+__all__ = ["latest_step", "load_pytree", "restore", "save_pytree"]

@@ -1,0 +1,94 @@
+"""npz pytree checkpointing with step metadata.
+
+Flat key = '/'-joined tree path; dtype and shape round-trip exactly
+(bfloat16 is stored as uint16 bits with a ``__bf16__`` marker since
+numpy's npz has no native bfloat16).
+"""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BF16 = "__bf16__"
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        out[key] = leaf
+    return out
+
+
+def save_pytree(path, tree, step: Optional[int] = None) -> Path:
+    """Write `tree` to `<path>` (npz).  Returns the written path."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    arrays = {}
+    meta = {"step": step, "keys": []}
+    for key, leaf in _flatten(tree).items():
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            arrays[key + _BF16] = arr.view(np.uint16)
+        else:
+            arrays[key] = arr
+        meta["keys"].append(key)
+    arrays["__meta__"] = np.frombuffer(
+        json.dumps(meta).encode(), dtype=np.uint8)
+    np.savez(path, **arrays)
+    return path if path.suffix == ".npz" else path.with_suffix(
+        path.suffix + ".npz")
+
+
+def load_pytree(path) -> Tuple[Dict[str, np.ndarray], Optional[int]]:
+    """Read a checkpoint into {flat_key: array} + step."""
+    with np.load(Path(path), allow_pickle=False) as z:
+        meta = json.loads(bytes(z["__meta__"]).decode())
+        out = {}
+        for k in z.files:
+            if k == "__meta__":
+                continue
+            if k.endswith(_BF16):
+                out[k[: -len(_BF16)]] = z[k].view(jnp.bfloat16)
+            else:
+                out[k] = z[k]
+    return out, meta.get("step")
+
+
+def restore(path, like):
+    """Load into the structure of `like` (a pytree template)."""
+    flat, step = load_pytree(path)
+    template = _flatten(like)
+    missing = set(template) - set(flat)
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
+    leaves = []
+    for path_leaf, leaf in jax.tree_util.tree_flatten_with_path(like)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path_leaf)
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    tree_def = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(tree_def, leaves), step
+
+
+def latest_step(ckpt_dir) -> Optional[Path]:
+    """Newest `step_<n>.npz` under `ckpt_dir`."""
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.is_dir():
+        return None
+    best, best_n = None, -1
+    for p in ckpt_dir.glob("step_*.npz"):
+        m = re.match(r"step_(\d+)", p.stem)
+        if m and int(m.group(1)) > best_n:
+            best, best_n = p, int(m.group(1))
+    return best

@@ -1,0 +1,21 @@
+from repro.configs.base import (
+    ARCH_KINDS,
+    EncDecConfig,
+    HybridConfig,
+    ModelConfig,
+    MoEConfig,
+    RWKVConfig,
+    SHAPES,
+    SSMConfig,
+    ShapeConfig,
+    VLMConfig,
+    get_config,
+    list_archs,
+    register,
+)
+
+__all__ = [
+    "ARCH_KINDS", "EncDecConfig", "HybridConfig", "ModelConfig", "MoEConfig",
+    "RWKVConfig", "SHAPES", "SSMConfig", "ShapeConfig", "VLMConfig",
+    "get_config", "list_archs", "register",
+]

@@ -1,0 +1,20 @@
+"""gemma-7b — dense, GeGLU, head_dim=256, MHA (kv=16). [arXiv:2403.08295]"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="gemma-7b",
+    kind="dense",
+    num_layers=28,
+    d_model=3072,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=24576,
+    vocab_size=256_000,
+    head_dim=256,                # q proj 3072 -> 4096
+    mlp="geglu",
+    norm="rmsnorm",
+    tie_embeddings=True,
+    scale_embeddings=True,
+    long_context_mode="swa",
+    source="arXiv:2403.08295",
+))

@@ -1,0 +1,42 @@
+"""The paper's own client models (App. A.1.1), used for the faithful floor.
+
+* ``paper-cnn``: CNN classifier analogous to the FMNIST model — two conv
+  layers + maxpool + fully-connected head (we run it on synthetic
+  Gaussian-mixture "images").
+* ``paper-mlp``: fast MLP classifier used by most FL unit tests and
+  benchmarks (same output-layer structure that HiCS-FL reads).
+
+These are `kind="classifier"` configs; d_model doubles as the hidden width
+and vocab_size as the number of classes C.
+"""
+from repro.configs.base import ModelConfig, register
+
+CNN = register(ModelConfig(
+    name="paper-cnn",
+    kind="classifier",
+    num_layers=2,                # conv blocks
+    d_model=64,                  # conv channels / hidden width
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=128,                    # fc hidden dim
+    vocab_size=10,               # classes
+    mlp="gelu",
+    norm="layernorm",
+    long_context_mode="skip",
+    source="HiCS-FL App. A.1.1 (FMNIST CNN)",
+))
+
+MLP = register(ModelConfig(
+    name="paper-mlp",
+    kind="classifier",
+    num_layers=2,
+    d_model=128,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=128,
+    vocab_size=10,
+    mlp="gelu",
+    norm="layernorm",
+    long_context_mode="skip",
+    source="HiCS-FL App. A.1.1 (MLP variant)",
+))

@@ -1,0 +1,27 @@
+"""pixtral-12b — pixtral-ViT frontend (stub) + mistral-nemo decoder.
+[hf:mistralai/Pixtral-12B-2409]
+
+The vision encoder is a STUB per the assignment carve-out: ``input_specs()``
+provides precomputed patch embeddings; we implement the multimodal
+projector + the 40L language decoder (d_model 5120, 32H GQA kv=8,
+head_dim 128 as in mistral-nemo).
+"""
+from repro.configs.base import ModelConfig, VLMConfig, register
+
+CONFIG = register(ModelConfig(
+    name="pixtral-12b",
+    kind="vlm",
+    num_layers=40,
+    d_model=5120,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=131_072,
+    head_dim=128,                # mistral-nemo style: q proj 5120 -> 4096
+    mlp="swiglu",
+    norm="rmsnorm",
+    rope_theta=1_000_000.0,
+    vlm=VLMConfig(num_patches=256, patch_embed_dim=1024),
+    long_context_mode="swa",
+    source="hf:mistralai/Pixtral-12B-2409",
+))

@@ -1,0 +1,20 @@
+"""qwen3-8b — dense, qk_norm, GQA kv=8. [hf:Qwen/Qwen3-8B]"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen3-8b",
+    kind="dense",
+    num_layers=36,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=12288,
+    vocab_size=151_936,
+    head_dim=128,
+    qk_norm=True,
+    mlp="swiglu",
+    norm="rmsnorm",
+    rope_theta=1_000_000.0,
+    long_context_mode="swa",
+    source="hf:Qwen/Qwen3-8B",
+))

@@ -1,0 +1,27 @@
+"""zamba2-7b — hybrid Mamba2 backbone + shared attention blocks.
+[arXiv:2411.15242]
+
+81 Mamba2 layers, with a shared (weight-tied) transformer block applied
+periodically (two alternating shared blocks in the public model).
+"""
+from repro.configs.base import HybridConfig, ModelConfig, SSMConfig, register
+
+CONFIG = register(ModelConfig(
+    name="zamba2-7b",
+    kind="hybrid",
+    num_layers=81,               # mamba2 blocks
+    d_model=3584,
+    num_heads=32,                # shared attention block heads
+    num_kv_heads=32,             # MHA in the shared block (GQA kv=32)
+    d_ff=14336,
+    vocab_size=32_000,
+    head_dim=112,                # 3584 / 32
+    mlp="swiglu",
+    norm="rmsnorm",
+    ssm=SSMConfig(state_dim=64, expand=2, conv_width=4, head_dim=64,
+                  chunk=256),
+    hybrid=HybridConfig(attn_period=6, num_shared_blocks=2),
+    long_context_mode="native",  # mamba decode state is O(1); shared attn
+                                 # uses SWA(4096) for long_500k
+    source="arXiv:2411.15242",
+))

@@ -1,0 +1,33 @@
+"""HiCS-FL core: the paper's contribution as composable server-side pieces.
+
+  hetero     — Eq. 6/7 heterogeneity estimation from output-layer updates
+  distance   — Eq. 9 heterogeneity-aware pairwise distance
+  clustering — numpy agglomerative (Ward / average / complete / single)
+  sampling   — Eq. 10 two-stage annealed cluster/client sampler
+  selectors  — HiCS-FL (Alg. 1) + 5 baselines behind one API
+"""
+from repro.core.clustering import agglomerate, cluster_means
+from repro.core.distance import distance_matrix, pairwise_arccos
+from repro.core.hetero import (delta_b_from_head_delta,
+                               dissimilarity_envelope,
+                               entropy_separation_bound, estimate_entropy,
+                               expected_bias_update, head_bias_update,
+                               label_entropy, softmax_entropy)
+from repro.core.sampling import (anneal, cluster_probs, hierarchical_sample,
+                                 sampling_probabilities)
+from repro.core.selectors import (SELECTORS, ClientSelector,
+                                  ClusteredSamplingSelector, DivFLSelector,
+                                  FedCorSelector, HiCSFLSelector,
+                                  PowerOfChoiceSelector, RandomSelector,
+                                  make_selector)
+
+__all__ = [
+    "agglomerate", "cluster_means", "distance_matrix", "pairwise_arccos",
+    "delta_b_from_head_delta", "dissimilarity_envelope",
+    "entropy_separation_bound", "estimate_entropy", "expected_bias_update",
+    "head_bias_update", "label_entropy", "softmax_entropy", "anneal",
+    "cluster_probs", "hierarchical_sample", "sampling_probabilities",
+    "SELECTORS", "ClientSelector", "ClusteredSamplingSelector",
+    "DivFLSelector", "FedCorSelector", "HiCSFLSelector",
+    "PowerOfChoiceSelector", "RandomSelector", "make_selector",
+]

@@ -1,0 +1,115 @@
+"""Agglomerative clustering on a precomputed distance matrix.
+
+The paper (App. A.1.2) groups clients with "an off-the-shelf clustering
+algorithm performing hierarchical clustering with Ward's Method" on the
+Eq. 9 distance.  scipy is not available offline, so this is a
+self-contained numpy implementation of bottom-up agglomerative
+clustering with Lance–Williams distance updates:
+
+    ward     (scipy-compatible on squared-distance semantics)
+    average  (UPGMA)
+    complete / single
+
+O(N³) naive nearest-pair search — plenty for N ≤ a few thousand clients
+(selection happens once per round, server-side).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+_LINKAGES = ("ward", "average", "complete", "single")
+
+
+def agglomerate(dist: np.ndarray, num_clusters: int,
+                linkage: str = "ward") -> np.ndarray:
+    """Cluster N items into ``num_clusters`` groups.
+
+    dist: (N, N) symmetric distance matrix (diagonal ignored).
+    Returns integer labels (N,) in [0, num_clusters), relabelled by
+    first appearance for determinism.
+    """
+    if linkage not in _LINKAGES:
+        raise ValueError(f"linkage must be one of {_LINKAGES}")
+    n = dist.shape[0]
+    if dist.shape != (n, n):
+        raise ValueError(f"distance matrix must be square, got {dist.shape}")
+    num_clusters = max(1, min(num_clusters, n))
+
+    # Work on a copy with +inf diagonal; ward operates on squared dists
+    # (Lance–Williams ward update is exact in d² space).
+    d = np.array(dist, dtype=np.float64)
+    d = 0.5 * (d + d.T)
+    if linkage == "ward":
+        d = d ** 2
+    np.fill_diagonal(d, np.inf)
+
+    active = np.ones(n, dtype=bool)
+    sizes = np.ones(n, dtype=np.int64)
+    labels = np.arange(n)
+    merges = n - num_clusters
+    for _ in range(merges):
+        flat = np.argmin(d)
+        i, j = np.unravel_index(flat, d.shape)
+        if i > j:
+            i, j = j, i
+        # Lance–Williams update of d(k, i∪j) for all active k != i, j
+        ni, nj = sizes[i], sizes[j]
+        k_mask = active.copy()
+        k_mask[i] = k_mask[j] = False
+        dik, djk = d[i, k_mask], d[j, k_mask]
+        if linkage == "ward":
+            nk = sizes[k_mask].astype(np.float64)
+            tot = ni + nj + nk
+            new = ((ni + nk) * dik + (nj + nk) * djk - nk * d[i, j]) / tot
+        elif linkage == "average":
+            new = (ni * dik + nj * djk) / (ni + nj)
+        elif linkage == "complete":
+            new = np.maximum(dik, djk)
+        else:  # single
+            new = np.minimum(dik, djk)
+        d[i, k_mask] = new
+        d[k_mask, i] = new
+        d[j, :] = np.inf
+        d[:, j] = np.inf
+        active[j] = False
+        sizes[i] = ni + nj
+        labels[labels == labels[j]] = labels[i]
+
+    # relabel 0..M-1 by first appearance
+    uniq: dict = {}
+    out = np.empty(n, dtype=np.int64)
+    for idx, lab in enumerate(labels):
+        if lab not in uniq:
+            uniq[lab] = len(uniq)
+        out[idx] = uniq[lab]
+    return out
+
+
+def cluster_means(values: np.ndarray, labels: np.ndarray,
+                  num_clusters: int) -> np.ndarray:
+    """Per-cluster mean of a per-item scalar (e.g. estimated entropy)."""
+    out = np.zeros(num_clusters, dtype=np.float64)
+    for m in range(num_clusters):
+        sel = labels == m
+        out[m] = float(np.mean(values[sel])) if np.any(sel) else 0.0
+    return out
+
+
+def silhouette_hint(dist: np.ndarray, labels: np.ndarray) -> float:
+    """Mean silhouette over items (diagnostic only; not used to select)."""
+    n = dist.shape[0]
+    uniq = np.unique(labels)
+    if len(uniq) < 2:
+        return 0.0
+    s = []
+    for i in range(n):
+        same = labels == labels[i]
+        same[i] = False
+        a = float(np.mean(dist[i, same])) if np.any(same) else 0.0
+        b = min(float(np.mean(dist[i, labels == m]))
+                for m in uniq if m != labels[i])
+        denom = max(a, b)
+        s.append(0.0 if denom == 0 else (b - a) / denom)
+    return float(np.mean(s))

@@ -1,0 +1,47 @@
+"""Heterogeneity-aware pairwise distance (paper §3.3, Eq. 9).
+
+    Distance(u, k) = arccos( <Δb_u, Δb_k> / (|Δb_u||Δb_k|) )
+                     + λ |Ĥ(D_u) − Ĥ(D_k)|
+
+computed on output-layer bias updates only — O(N²·C) total, versus the
+O(N²·|θ|) Gram matrix that Clustered Sampling [11] builds on full
+gradients.  For LLM heads (C up to 256k) the Gram product is a real
+matmul; ``repro/kernels/pairwise`` provides the MXU-tiled Pallas kernel
+with the arccos + λ|ΔĤ| epilogue fused; this module is the jnp
+reference used on CPU and by the kernel's allclose tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hetero import estimate_entropy
+
+
+def pairwise_arccos(updates: jnp.ndarray, eps: float = 1e-8) -> jnp.ndarray:
+    """arccos of the row-wise cosine-similarity matrix.
+
+    updates: (N, C).  Returns (N, N) angles in [0, π].  The diagonal is
+    exactly 0 (clipped before arccos so autodiff/NaNs never appear).
+    """
+    norms = jnp.linalg.norm(updates, axis=-1, keepdims=True)
+    unit = updates / jnp.clip(norms, eps, None)
+    cos = unit @ unit.T
+    cos = jnp.clip(cos, -1.0 + 1e-7, 1.0 - 1e-7)
+    ang = jnp.arccos(cos)
+    return ang * (1.0 - jnp.eye(updates.shape[0], dtype=ang.dtype))
+
+
+def distance_matrix(updates: jnp.ndarray, temperature: float,
+                    lam: float = 10.0,
+                    entropies: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Eq. 9 pairwise distance over N clients' bias updates (N, C).
+
+    ``entropies`` may be supplied (e.g. from the Pallas entropy kernel);
+    otherwise they are recomputed here via Eq. 7.
+    """
+    if entropies is None:
+        entropies = estimate_entropy(updates, temperature)
+    ang = pairwise_arccos(updates)
+    dh = jnp.abs(entropies[:, None] - entropies[None, :])
+    return ang + lam * dh

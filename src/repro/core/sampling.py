@@ -1,0 +1,89 @@
+"""Two-stage hierarchical clustered sampling (paper §3.4, Eq. 10).
+
+Stage 1 — pick a cluster m with probability
+    π_m^t = exp(γ^t H̄_m^t) / Σ_m' exp(γ^t H̄_m'^t)
+where H̄_m is the mean *estimated* entropy of the cluster's clients and
+γ^t = γ⁰(1 − t/T) anneals from heterogeneity-greedy to uniform.
+
+Stage 2 — pick a client k inside the cluster with probability
+    p̃_k = p_k / Σ_{j∈G_m} p_j        (p_k ∝ |B_k| by default).
+
+Selection of K clients repeats the two stages without replacement
+(a drawn client is removed; an emptied cluster is renormalized away),
+matching Algorithm 1's `while |S^t| < K` loop.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+
+def anneal(gamma0: float, t: int, total_rounds: int) -> float:
+    """γ^t = γ⁰ (1 − t/T), clipped at 0."""
+    return float(gamma0 * max(0.0, 1.0 - t / max(1, total_rounds)))
+
+
+def cluster_probs(mean_entropies: np.ndarray, gamma_t: float) -> np.ndarray:
+    """π^t over clusters (Eq. 10 left), numerically stable softmax."""
+    z = gamma_t * np.asarray(mean_entropies, dtype=np.float64)
+    z = z - np.max(z)
+    e = np.exp(z)
+    return e / np.sum(e)
+
+
+def hierarchical_sample(rng: np.random.Generator,
+                        labels: np.ndarray,
+                        mean_entropies: np.ndarray,
+                        weights: np.ndarray,
+                        k: int,
+                        gamma_t: float) -> List[int]:
+    """Draw K distinct client indices via the two-stage scheme.
+
+    labels: (N,) cluster id per client; mean_entropies: (M,) H̄_m;
+    weights: (N,) p_k (need not be normalized); k: number to select.
+    """
+    n = len(labels)
+    k = min(k, n)
+    m = int(np.max(labels)) + 1 if n else 0
+    avail = [list(np.flatnonzero(labels == c)) for c in range(m)]
+    pi = cluster_probs(mean_entropies, gamma_t)
+    w = np.asarray(weights, dtype=np.float64)
+    chosen: List[int] = []
+    while len(chosen) < k:
+        mask = np.array([len(a) > 0 for a in avail], dtype=np.float64)
+        probs = pi * mask
+        s = probs.sum()
+        if s <= 0:
+            probs = mask / mask.sum()
+        else:
+            probs = probs / s
+        c = int(rng.choice(m, p=probs))
+        cand = avail[c]
+        pw = w[cand]
+        pw = pw / pw.sum() if pw.sum() > 0 else np.full(len(cand),
+                                                        1.0 / len(cand))
+        pick = int(rng.choice(len(cand), p=pw))
+        chosen.append(cand.pop(pick))
+    return chosen
+
+
+def sampling_probabilities(labels: np.ndarray, mean_entropies: np.ndarray,
+                           weights: np.ndarray,
+                           gamma_t: float) -> np.ndarray:
+    """Single-draw marginal ω_k^t = π_{m(k)} · p_k / Σ_{j∈G_m} p_j.
+
+    Used by the convergence-analysis benchmark (§3.5 discussion: ω_k^t ∝
+    p_k exp(γ^t Ĥ_k) when clusters are entropy-pure).
+    """
+    pi = cluster_probs(mean_entropies, gamma_t)
+    w = np.asarray(weights, dtype=np.float64)
+    out = np.zeros(len(labels), dtype=np.float64)
+    for c in np.unique(labels):
+        sel = labels == c
+        denom = w[sel].sum()
+        if denom > 0:
+            out[sel] = pi[c] * w[sel] / denom
+        else:
+            out[sel] = pi[c] / sel.sum()
+    return out

@@ -1,0 +1,385 @@
+"""Client selectors: HiCS-FL (Algorithm 1) + the paper's five baselines.
+
+One uniform server-side API:
+
+    sel = make_selector("hics", num_clients=N, num_select=K,
+                        total_rounds=T, weights=p, temperature=T_soft)
+    ids = sel.select(t)                       # round t's participant set
+    sel.update(t, ids, bias_updates=..., full_updates=..., losses=...)
+
+``requires`` declares what the server must compute for the selector each
+round — this is the bookkeeping behind the Table 3 overhead comparison:
+
+    random   : nothing
+    pow-d    : losses of ALL clients (ideal setting, App. A.1.2)
+    cs       : full model updates of participants  (O(|θ|) clustering)
+    divfl    : full model updates of ALL clients   (ideal setting)
+    fedcor   : losses of ALL clients in the warm-up stage (GP fit)
+    hics     : bias updates of participants        (O(C) — the paper)
+
+All selectors are pure numpy server logic; nothing here touches the
+mesh.  HiCS-FL's O(C) hot paths (entropy over (N, C), pairwise Eq. 9)
+have Pallas TPU kernels in ``repro/kernels`` for vocab-sized C.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.clustering import agglomerate, cluster_means
+from repro.core.distance import distance_matrix
+from repro.core.hetero import estimate_entropy
+from repro.core.sampling import anneal, hierarchical_sample
+
+# ---------------------------------------------------------------------------
+# Base
+# ---------------------------------------------------------------------------
+
+
+class ClientSelector:
+    """Interface; subclasses override select() and update()."""
+
+    name = "base"
+    #: what the server must compute each round: subset of
+    #: {"loss_all", "full_all", "full_sel", "bias_sel"}
+    requires: frozenset = frozenset()
+
+    def __init__(self, num_clients: int, num_select: int, total_rounds: int,
+                 weights: Optional[Sequence[float]] = None, seed: int = 0,
+                 **_kw):
+        self.n = int(num_clients)
+        self.k = int(num_select)
+        self.total_rounds = int(total_rounds)
+        w = np.ones(self.n) if weights is None else np.asarray(
+            weights, dtype=np.float64)
+        self.weights = w / w.sum()
+        self.rng = np.random.default_rng(seed)
+        self.select_seconds = 0.0      # cumulative selection compute time
+        self.update_seconds = 0.0
+
+    # -- public API ---------------------------------------------------------
+    def select(self, t: int) -> List[int]:
+        t0 = time.perf_counter()
+        out = self._select(t)
+        self.select_seconds += time.perf_counter() - t0
+        return out
+
+    def update(self, t: int, selected: Sequence[int], *,
+               bias_updates: Optional[np.ndarray] = None,
+               full_updates: Optional[np.ndarray] = None,
+               losses: Optional[np.ndarray] = None) -> None:
+        t0 = time.perf_counter()
+        self._update(t, list(selected), bias_updates=bias_updates,
+                     full_updates=full_updates, losses=losses)
+        self.update_seconds += time.perf_counter() - t0
+
+    # -- to override ---------------------------------------------------------
+    def _select(self, t: int) -> List[int]:
+        raise NotImplementedError
+
+    def _update(self, t, selected, **kw) -> None:
+        pass
+
+    # -- helpers -------------------------------------------------------------
+    def _weighted_without_replacement(self, k: int,
+                                      w: Optional[np.ndarray] = None
+                                      ) -> List[int]:
+        w = self.weights if w is None else w
+        w = np.asarray(w, dtype=np.float64)
+        w = w / w.sum()
+        return list(self.rng.choice(self.n, size=min(k, self.n),
+                                    replace=False, p=w))
+
+
+# ---------------------------------------------------------------------------
+# Baselines
+# ---------------------------------------------------------------------------
+
+
+class RandomSelector(ClientSelector):
+    """FedProx-style multinomial sampling ∝ p_k, without replacement."""
+
+    name = "random"
+    requires = frozenset()
+
+    def _select(self, t: int) -> List[int]:
+        return self._weighted_without_replacement(self.k)
+
+
+class PowerOfChoiceSelector(ClientSelector):
+    """pow-d [8]: sample d candidates ∝ p_k, keep the K with the largest
+    local loss.  Ideal setting (App. A.1.2): d = N, i.e. the server asks
+    *all* clients for their current local loss each round."""
+
+    name = "pow-d"
+    requires = frozenset({"loss_all"})
+
+    def __init__(self, *a, d: Optional[int] = None, **kw):
+        super().__init__(*a, **kw)
+        self.d = self.n if d is None else min(int(d), self.n)
+        self._losses = np.zeros(self.n)
+
+    def _select(self, t: int) -> List[int]:
+        if not np.any(self._losses):
+            return self._weighted_without_replacement(self.k)
+        cand = self._weighted_without_replacement(self.d)
+        cand.sort(key=lambda i: -self._losses[i])
+        return cand[: self.k]
+
+    def _update(self, t, selected, losses=None, **kw):
+        if losses is not None:
+            self._losses = np.asarray(losses, dtype=np.float64)
+
+
+class ClusteredSamplingSelector(ClientSelector):
+    """Clustered Sampling [11] (Alg. 2 flavour): cluster participants'
+    model updates by cosine similarity (arccos distance), then sample one
+    client per cluster uniformly.  Operates on *full* updates — O(N²|θ|)
+    similarity, the cost the paper's Table 3 charges it with.  Clients
+    never observed keep the zero vector and land in a shared cluster."""
+
+    name = "cs"
+    requires = frozenset({"full_sel"})
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self._feats: Optional[np.ndarray] = None
+        self._seen = np.zeros(self.n, dtype=bool)
+
+    def _select(self, t: int) -> List[int]:
+        # warm-up sweep: deterministic coverage like Alg. 1's first rounds
+        if not np.all(self._seen):
+            unseen = list(np.flatnonzero(~self._seen))
+            self.rng.shuffle(unseen)
+            take = unseen[: self.k]
+            if len(take) < self.k:
+                rest = [i for i in range(self.n) if i not in take]
+                take += list(self.rng.choice(rest, self.k - len(take),
+                                             replace=False))
+            return take
+        ang = _arccos_dist(self._feats)
+        labels = agglomerate(ang, self.k, linkage="ward")
+        out = []
+        for m in range(self.k):
+            members = np.flatnonzero(labels == m)
+            if len(members) == 0:
+                continue
+            w = self.weights[members]
+            w = w / w.sum()
+            out.append(int(self.rng.choice(members, p=w)))
+        while len(out) < self.k:  # merged clusters -> fill randomly
+            extra = [i for i in range(self.n) if i not in out]
+            out.append(int(self.rng.choice(extra)))
+        return out
+
+    def _update(self, t, selected, full_updates=None, **kw):
+        if full_updates is None:
+            return
+        if self._feats is None:
+            self._feats = np.zeros((self.n, full_updates.shape[-1]))
+        for row, i in enumerate(selected):
+            self._feats[i] = full_updates[row]
+            self._seen[i] = True
+
+
+class DivFLSelector(ClientSelector):
+    """DivFL [2]: greedy facility-location submodular maximization on the
+    gradient dissimilarity matrix; ideal setting = 1-step gradients from
+    all clients each round."""
+
+    name = "divfl"
+    requires = frozenset({"full_all"})
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self._feats: Optional[np.ndarray] = None
+
+    def _select(self, t: int) -> List[int]:
+        if self._feats is None:
+            return self._weighted_without_replacement(self.k)
+        # dissimilarity = euclidean distance between updates
+        g = self._feats
+        sq = np.sum(g * g, axis=1)
+        dist = np.sqrt(np.maximum(sq[:, None] + sq[None, :] - 2 * g @ g.T,
+                                  0.0))
+        chosen: List[int] = []
+        # facility location: minimize Σ_i min_{j∈S} dist(i, j)
+        cover = np.full(self.n, np.inf)
+        for _ in range(self.k):
+            gains = np.sum(np.maximum(cover[None, :] - dist, 0.0), axis=1)
+            gains[chosen] = -np.inf
+            j = int(np.argmax(gains))
+            chosen.append(j)
+            cover = np.minimum(cover, dist[j])
+        return chosen
+
+    def _update(self, t, selected, full_updates=None, **kw):
+        if full_updates is not None and full_updates.shape[0] == self.n:
+            self._feats = np.asarray(full_updates, dtype=np.float64)
+
+
+class FedCorSelector(ClientSelector):
+    """FedCor [28]: model client losses with a GP; select greedily to
+    maximize posterior loss-reduction.  Faithful-in-spirit compact
+    implementation: RBF kernel over running loss-history embeddings,
+    warm-up phase polls all clients' losses (the cost Table 3 charges),
+    then greedy max-variance-reduction selection with annealing β."""
+
+    name = "fedcor"
+    requires = frozenset({"loss_all"})
+
+    def __init__(self, *a, warmup: int = 10, beta: float = 0.9,
+                 length_scale: float = 1.0, **kw):
+        super().__init__(*a, **kw)
+        self.warmup = int(warmup)
+        self.beta = float(beta)
+        self.ls = float(length_scale)
+        self._hist: List[np.ndarray] = []
+        self._losses = np.zeros(self.n)
+
+    def _embed(self) -> np.ndarray:
+        h = np.stack(self._hist[-8:], axis=1)  # (N, <=8)
+        mu = h.mean(axis=1, keepdims=True)
+        sd = h.std(axis=1, keepdims=True) + 1e-8
+        return (h - mu) / sd
+
+    def _select(self, t: int) -> List[int]:
+        if t < self.warmup or len(self._hist) < 2:
+            return self._weighted_without_replacement(self.k)
+        x = self._embed()
+        d2 = np.sum((x[:, None, :] - x[None, :, :]) ** 2, axis=-1)
+        kmat = np.exp(-d2 / (2 * self.ls ** 2))
+        kmat = self.beta ** (t - self.warmup) * kmat \
+            + (1 - self.beta ** (t - self.warmup)) * np.eye(self.n)
+        var = kmat.diagonal().copy()
+        cov = kmat.copy()
+        chosen: List[int] = []
+        for _ in range(self.k):
+            # greedy: largest expected variance reduction weighted by loss
+            score = var * (1.0 + self._losses)
+            score[chosen] = -np.inf
+            j = int(np.argmax(score))
+            chosen.append(j)
+            cj = cov[:, j]
+            denom = cov[j, j] + 1e-8
+            var = var - cj * cj / denom
+            cov = cov - np.outer(cj, cj) / denom
+        return chosen
+
+    def _update(self, t, selected, losses=None, **kw):
+        if losses is not None:
+            self._losses = np.asarray(losses, dtype=np.float64)
+            self._hist.append(self._losses.copy())
+
+
+# ---------------------------------------------------------------------------
+# HiCS-FL (the paper)
+# ---------------------------------------------------------------------------
+
+
+class HiCSFLSelector(ClientSelector):
+    """Algorithm 1.
+
+    Rounds t ≤ ⌈N/K⌉: random coverage sweep without replacement (S₀).
+    Afterwards: estimate Ĥ for every client whose Δb has been observed,
+    cluster with the Eq. 9 distance into M = K groups, then two-stage
+    sample (Eq. 10) with annealed γ^t.
+    """
+
+    name = "hics"
+    requires = frozenset({"bias_sel"})
+
+    def __init__(self, *a, temperature: float = 0.0025, lam: float = 10.0,
+                 gamma0: float = 4.0, num_clusters: Optional[int] = None,
+                 linkage: str = "ward", normalize: bool = False, **kw):
+        super().__init__(*a, **kw)
+        self.temperature = float(temperature)
+        self.lam = float(lam)
+        self.gamma0 = float(gamma0)
+        self.m = int(num_clusters) if num_clusters else self.k
+        self.linkage = linkage
+        # beyond-paper: magnitude-invariant Ĥ (see hetero.estimate_entropy)
+        self.normalize = bool(normalize)
+        self._delta_b: Optional[np.ndarray] = None     # (N, C), zeros=unseen
+        self._seen = np.zeros(self.n, dtype=bool)
+        self._coverage_pool = list(range(self.n))
+        self.last_entropies: Optional[np.ndarray] = None
+        self.last_labels: Optional[np.ndarray] = None
+
+    # -- Alg. 1 lines 14-15: initial coverage sweep --------------------------
+    def _sweep(self) -> List[int]:
+        take = min(self.k, len(self._coverage_pool))
+        idx = self.rng.choice(len(self._coverage_pool), take, replace=False)
+        out = [self._coverage_pool[i] for i in sorted(idx, reverse=True)]
+        for i in sorted(idx, reverse=True):
+            self._coverage_pool.pop(i)
+        if len(out) < self.k:
+            rest = [i for i in range(self.n) if i not in out]
+            out += list(self.rng.choice(rest, self.k - len(out),
+                                        replace=False))
+        return out
+
+    def _select(self, t: int) -> List[int]:
+        if self._coverage_pool or self._delta_b is None:
+            return self._sweep()
+        ent = np.asarray(estimate_entropy(self._delta_b, self.temperature,
+                                          normalize=self.normalize))
+        dist = np.asarray(distance_matrix(self._delta_b, self.temperature,
+                                          self.lam, entropies=ent))
+        labels = agglomerate(dist, self.m, linkage=self.linkage)
+        means = cluster_means(ent, labels, int(labels.max()) + 1)
+        gamma_t = anneal(self.gamma0, t, self.total_rounds)
+        self.last_entropies, self.last_labels = ent, labels
+        return hierarchical_sample(self.rng, labels, means, self.weights,
+                                   self.k, gamma_t)
+
+    def _update(self, t, selected, bias_updates=None, **kw):
+        if bias_updates is None:
+            return
+        bias_updates = np.asarray(bias_updates, dtype=np.float64)
+        if self._delta_b is None:
+            self._delta_b = np.zeros((self.n, bias_updates.shape[-1]))
+        for row, i in enumerate(selected):
+            self._delta_b[i] = bias_updates[row]   # Alg.1 line 17: replace
+            self._seen[i] = True
+
+    def estimated_entropies(self) -> Optional[np.ndarray]:
+        if self._delta_b is None:
+            return None
+        return np.asarray(estimate_entropy(self._delta_b, self.temperature,
+                                           normalize=self.normalize))
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+SELECTORS: Dict[str, type] = {
+    "random": RandomSelector,
+    "pow-d": PowerOfChoiceSelector,
+    "cs": ClusteredSamplingSelector,
+    "divfl": DivFLSelector,
+    "fedcor": FedCorSelector,
+    "hics": HiCSFLSelector,
+}
+
+
+def make_selector(name: str, **kw) -> ClientSelector:
+    try:
+        cls = SELECTORS[name]
+    except KeyError:
+        raise KeyError(f"unknown selector {name!r}; known: "
+                       f"{sorted(SELECTORS)}") from None
+    return cls(**kw)
+
+
+def _arccos_dist(feats: np.ndarray, eps: float = 1e-8) -> np.ndarray:
+    norms = np.linalg.norm(feats, axis=-1, keepdims=True)
+    unit = feats / np.clip(norms, eps, None)
+    cos = np.clip(unit @ unit.T, -1.0 + 1e-7, 1.0 - 1e-7)
+    ang = np.arccos(cos)
+    np.fill_diagonal(ang, 0.0)
+    return ang

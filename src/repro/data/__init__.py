@@ -1,0 +1,6 @@
+from repro.data.synthetic import (SyntheticSpec, client_label_distributions,
+                                  make_classification_data, make_lm_streams,
+                                  pad_and_stack)
+
+__all__ = ["SyntheticSpec", "client_label_distributions",
+           "make_classification_data", "make_lm_streams", "pad_and_stack"]

@@ -1,0 +1,14 @@
+"""Federated-learning runtime: partitioning, clients, server, simulation."""
+from repro.fed.client import (ALGOS, OPTIMIZERS, LocalSpec, init_extra,
+                              make_eval_fn, make_local_update)
+from repro.fed.partition import dirichlet_partition, multi_alpha_partition
+from repro.fed.server import FedConfig, FederatedServer, rounds_to_accuracy
+from repro.fed.simulation import (PAPER_SETTINGS, ExperimentSpec, build,
+                                  run_experiment)
+
+__all__ = [
+    "ALGOS", "OPTIMIZERS", "LocalSpec", "init_extra", "make_eval_fn",
+    "make_local_update", "dirichlet_partition", "multi_alpha_partition",
+    "FedConfig", "FederatedServer", "rounds_to_accuracy",
+    "PAPER_SETTINGS", "ExperimentSpec", "build", "run_experiment",
+]

@@ -1,0 +1,182 @@
+"""Client-side LocalUpdate (Algorithm 1 line 3) for every FL-algorithm ×
+optimizer combination the paper analyzes:
+
+  algorithms : fedavg | fedprox (Eq. 67) | feddyn (Eq. 74) | moon (Eq. 91)
+  optimizers : sgd | sgd-momentum | adam        (App. A.9)
+
+Every client's dataset is padded to a common (Smax, d) with a sample
+mask (repro.data.pad_and_stack), so one jit'd ``local_update`` serves
+all clients of a cohort — and the whole cohort can be vmapped
+(repro.fed.simulation).  Training runs R epochs of mini-batch steps via
+``lax.scan`` with a per-epoch reshuffle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adam, apply_updates, sgd, sgd_momentum
+
+ALGOS = ("fedavg", "fedprox", "feddyn", "moon")
+OPTIMIZERS = {"sgd": sgd, "momentum": sgd_momentum, "adam": adam}
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalSpec:
+    algo: str = "fedavg"
+    optimizer: str = "sgd"
+    lr: float = 0.001
+    epochs: int = 2              # R in the paper
+    batch_size: int = 64        # B in the paper
+    mu: float = 0.1              # fedprox/feddyn/moon regularization weight
+    moon_tau: float = 0.5        # Moon contrastive temperature
+
+    def __post_init__(self):
+        if self.algo not in ALGOS:
+            raise ValueError(f"algo must be one of {ALGOS}")
+        if self.optimizer not in OPTIMIZERS:
+            raise ValueError(
+                f"optimizer must be one of {tuple(OPTIMIZERS)}")
+
+
+def _masked_ce(logits, labels, mask):
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    per = (logz - tgt) * mask
+    return per.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def _tree_sqdist(a, b):
+    return sum(jnp.sum(jnp.square(x - y)) for x, y in zip(
+        jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+
+
+def _tree_dot(a, b):
+    return sum(jnp.sum(x * y) for x, y in zip(
+        jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+
+
+def _moon_term(feat, feat_glob, feat_prev, tau, mask):
+    """−log( e^{sim(z, z_g)/τ} / (e^{sim(z, z_g)/τ} + e^{sim(z, z_p)/τ}) )"""
+    def cos(u, v):
+        un = u / (jnp.linalg.norm(u, axis=-1, keepdims=True) + 1e-8)
+        vn = v / (jnp.linalg.norm(v, axis=-1, keepdims=True) + 1e-8)
+        return jnp.sum(un * vn, axis=-1)
+    pos = cos(feat, feat_glob) / tau
+    neg = cos(feat, feat_prev) / tau
+    per = jax.nn.logsumexp(jnp.stack([pos, neg], -1), axis=-1) - pos
+    return (per * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def make_local_update(apply_fn: Callable, spec: LocalSpec,
+                      features_fn: Optional[Callable] = None) -> Callable:
+    """Build ``local_update(global_params, extra, x, y, mask, rng)``.
+
+    extra: dict with optional per-client persistent state —
+      "h"    : FedDyn's gradient-correction pytree (same shape as params)
+      "prev" : Moon's previous-round local params
+    Returns (local_params, new_extra, metrics).
+    """
+    opt = OPTIMIZERS[spec.optimizer](spec.lr)
+    if spec.algo == "moon" and features_fn is None:
+        raise ValueError("moon requires a features_fn")
+
+    def loss_for_batch(params, global_params, extra, xb, yb, mb):
+        loss, _ = _base(params, xb, yb, mb)
+        if spec.algo == "fedprox":
+            loss = loss + 0.5 * spec.mu * _tree_sqdist(params, global_params)
+        elif spec.algo == "feddyn":
+            loss = (loss - _tree_dot(extra["h"], params)
+                    + 0.5 * spec.mu * _tree_sqdist(params, global_params))
+        elif spec.algo == "moon":
+            feat = features_fn(params, xb)
+            fg = jax.lax.stop_gradient(features_fn(global_params, xb))
+            fp = jax.lax.stop_gradient(features_fn(extra["prev"], xb))
+            loss = loss + spec.mu * _moon_term(feat, fg, fp, spec.moon_tau,
+                                               mb)
+        return loss
+
+    def _base(params, xb, yb, mb):
+        logits = apply_fn(params, xb)
+        loss = _masked_ce(logits, yb, mb)
+        acc = jnp.sum((jnp.argmax(logits, -1) == yb) * mb) \
+            / jnp.maximum(mb.sum(), 1.0)
+        return loss, acc
+
+    def local_update(global_params, extra, x, y, mask, rng):
+        s_max = x.shape[0]
+        bs = min(spec.batch_size, s_max)
+        nb = max(1, s_max // bs)
+        usable = nb * bs
+
+        def epoch(carry, erng):
+            params, opt_state = carry
+            perm = jax.random.permutation(erng, s_max)[:usable]
+            xb = x[perm].reshape(nb, bs, *x.shape[1:])
+            yb = y[perm].reshape(nb, bs)
+            mb = mask[perm].reshape(nb, bs)
+
+            def step(carry, inp):
+                params, opt_state = carry
+                xi, yi, mi = inp
+                loss, grads = jax.value_and_grad(loss_for_batch)(
+                    params, global_params, extra, xi, yi, mi)
+                # fully-masked (padding-only) batches must be a no-op
+                live = (mi.sum() > 0).astype(jnp.float32)
+                grads = jax.tree_util.tree_map(lambda g: g * live, grads)
+                updates, opt_state = opt.update(grads, opt_state, params)
+                params = apply_updates(params, updates)
+                return (params, opt_state), loss
+
+            (params, opt_state), losses = jax.lax.scan(
+                step, (params, opt_state), (xb, yb, mb))
+            return (params, opt_state), losses.mean()
+
+        params0 = jax.tree_util.tree_map(jnp.asarray, global_params)
+        opt_state = opt.init(params0)
+        erngs = jax.random.split(rng, spec.epochs)
+        (params, _), epoch_losses = jax.lax.scan(
+            epoch, (params0, opt_state), erngs)
+
+        new_extra = dict(extra)
+        if spec.algo == "feddyn":
+            # h_k ← h_k − μ (θ_k − θ^t)
+            new_extra["h"] = jax.tree_util.tree_map(
+                lambda h, p, g: h - spec.mu * (p - g),
+                extra["h"], params, global_params)
+        if spec.algo == "moon":
+            new_extra["prev"] = params
+        final_loss, final_acc = _base(params, x, y, mask)
+        metrics = {"train_loss": epoch_losses.mean(),
+                   "final_loss": final_loss, "final_acc": final_acc}
+        return params, new_extra, metrics
+
+    return local_update
+
+
+def make_eval_fn(apply_fn: Callable) -> Callable:
+    """jit'd (params, x, y, mask) -> (loss, acc); for pow-d's loss_all
+    polling and for global test evaluation."""
+    @jax.jit
+    def evaluate(params, x, y, mask):
+        logits = apply_fn(params, x)
+        loss = _masked_ce(logits, y, mask)
+        acc = jnp.sum((jnp.argmax(logits, -1) == y) * mask) \
+            / jnp.maximum(mask.sum(), 1.0)
+        return loss, acc
+    return evaluate
+
+
+def init_extra(spec: LocalSpec, params) -> Dict[str, Any]:
+    """Per-client persistent algorithm state at round 0."""
+    extra: Dict[str, Any] = {}
+    if spec.algo == "feddyn":
+        extra["h"] = jax.tree_util.tree_map(jnp.zeros_like, params)
+    if spec.algo == "moon":
+        extra["prev"] = params
+    return extra

@@ -1,0 +1,72 @@
+"""Non-IID data partitioning (paper App. A.10, following [35]).
+
+For each label i, proportions X_i^(1..N) ~ Dir(α) are drawn and client k
+receives X_i^(k) N_i / Σ_j X_i^(j) of the label-i samples.  With several
+concentration parameters (the paper's multi-α settings), the training
+set is split into |α| equal parts and each part is partitioned over its
+client group with its own α — producing cohorts in which e.g. 80% of
+clients are severely imbalanced while 20% are balanced.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+def dirichlet_partition(rng: np.random.Generator, labels: np.ndarray,
+                        num_clients: int, alpha: float,
+                        min_per_client: int = 2) -> List[np.ndarray]:
+    """Indices of `labels` split over clients with per-label Dir(α)."""
+    num_classes = int(labels.max()) + 1
+    client_idx: List[List[int]] = [[] for _ in range(num_clients)]
+    for c in range(num_classes):
+        idx = np.flatnonzero(labels == c)
+        rng.shuffle(idx)
+        props = rng.dirichlet(np.full(num_clients, alpha))
+        counts = _largest_remainder(props, len(idx))
+        start = 0
+        for k, cnt in enumerate(counts):
+            client_idx[k].extend(idx[start:start + cnt])
+            start += cnt
+    out = []
+    pool = list(range(len(labels)))
+    for k in range(num_clients):
+        ids = np.asarray(client_idx[k], dtype=np.int64)
+        if len(ids) < min_per_client:   # top up starved clients
+            extra = rng.choice(pool, min_per_client - len(ids),
+                               replace=False)
+            ids = np.concatenate([ids, extra])
+        rng.shuffle(ids)
+        out.append(ids)
+    return out
+
+
+def multi_alpha_partition(rng: np.random.Generator, labels: np.ndarray,
+                          num_clients: int, alphas: Sequence[float],
+                          ) -> Tuple[List[np.ndarray], np.ndarray]:
+    """The paper's multi-α scheme.  Returns (per-client indices,
+    per-client α used) — client groups are equal splits over `alphas`,
+    each group partitioning an equal slice of the data."""
+    alphas = list(alphas)
+    n_groups = len(alphas)
+    perm = rng.permutation(len(labels))
+    data_slices = np.array_split(perm, n_groups)
+    client_groups = np.array_split(np.arange(num_clients), n_groups)
+    out: List[np.ndarray] = [np.empty(0, dtype=np.int64)] * num_clients
+    client_alpha = np.zeros(num_clients)
+    for alpha, dslice, cgroup in zip(alphas, data_slices, client_groups):
+        sub = dirichlet_partition(rng, labels[dslice], len(cgroup), alpha)
+        for local_k, k in enumerate(cgroup):
+            out[k] = dslice[sub[local_k]]
+            client_alpha[k] = alpha
+    return out, client_alpha
+
+
+def _largest_remainder(props: np.ndarray, total: int) -> np.ndarray:
+    raw = props * total
+    counts = np.floor(raw).astype(np.int64)
+    rem = total - counts.sum()
+    order = np.argsort(-(raw - counts))
+    counts[order[:rem]] += 1
+    return counts

@@ -1,0 +1,208 @@
+"""Federated server: the round loop of Algorithm 1 with pluggable client
+selection, for any (init, apply[, features]) model triple.
+
+Per round t:
+  1. S^t ← selector.select(t)
+  2. whatever the selector requires is computed server-side:
+       loss_all  — global-model loss on every client's data (pow-d, FedCor
+                   ideal setting); one vmapped forward
+       full_all  — 1-step gradient from every client (DivFL ideal setting)
+  3. LocalUpdate for the selected clients (one vmapped jit'd cohort step)
+  4. θ^{t+1} ← (1/K) Σ_{k∈S^t} θ_k^t   (unbiased-sampling aggregation)
+  5. Δb^{(k)} extracted from the head for k ∈ S^t; selector.update(...)
+
+History records per-round train loss / selected ids / Δb-derived
+entropies and periodic test accuracy — everything the paper's
+figures/tables need.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import head_bias_update, make_selector
+from repro.fed.client import (LocalSpec, init_extra, make_eval_fn,
+                              make_local_update)
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    num_clients: int = 50
+    num_select: int = 5
+    rounds: int = 100
+    selector: str = "hics"
+    selector_kw: Optional[Dict[str, Any]] = None
+    local: LocalSpec = dataclasses.field(default_factory=LocalSpec)
+    eval_every: int = 5
+    seed: int = 0
+    lr_decay_every: int = 10     # paper: lr halves every 10 rounds
+    lr_decay: float = 0.5
+
+
+def _tree_stack_gather(stacked, ids):
+    return jax.tree_util.tree_map(lambda a: a[ids], stacked)
+
+
+def _tree_stack_scatter(stacked, ids, values):
+    return jax.tree_util.tree_map(
+        lambda a, v: a.at[ids].set(v), stacked, values)
+
+
+def _flatten_params(tree) -> jnp.ndarray:
+    return jnp.concatenate([jnp.ravel(x) for x in
+                            jax.tree_util.tree_leaves(tree)])
+
+
+class FederatedServer:
+    """Drives T rounds of federated training over padded client data."""
+
+    def __init__(self, init_fn, apply_fn, cfg: FedConfig,
+                 client_x: np.ndarray, client_y: np.ndarray,
+                 client_mask: np.ndarray,
+                 test: Optional[Dict[str, np.ndarray]] = None,
+                 features_fn=None):
+        assert client_x.shape[0] == cfg.num_clients
+        self.cfg = cfg
+        self.x = jnp.asarray(client_x)
+        self.y = jnp.asarray(client_y)
+        self.mask = jnp.asarray(client_mask)
+        self.test = test
+        self.rng = jax.random.PRNGKey(cfg.seed)
+        self.rng, k0 = jax.random.split(self.rng)
+        self.params = init_fn(k0)
+        self.apply_fn = apply_fn
+        # client weights p_k ∝ |B_k|
+        sizes = np.asarray(client_mask.sum(axis=1))
+        kw = dict(cfg.selector_kw or {})
+        self.selector = make_selector(
+            cfg.selector, num_clients=cfg.num_clients,
+            num_select=cfg.num_select, total_rounds=cfg.rounds,
+            weights=sizes, seed=cfg.seed, **kw)
+        self.local_spec = cfg.local
+        self._lu = make_local_update(apply_fn, cfg.local, features_fn)
+        self._lu_vmapped = jax.jit(jax.vmap(
+            self._lu, in_axes=(None, 0, 0, 0, 0, 0)))
+        self._eval = make_eval_fn(apply_fn)
+        self._eval_vmapped = jax.jit(jax.vmap(
+            lambda p, x, y, m: self._eval(p, x, y, m),
+            in_axes=(None, 0, 0, 0)))
+        ex0 = init_extra(cfg.local, self.params)
+        self._extras = jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (cfg.num_clients,) + l.shape),
+            ex0) if ex0 else {}
+        # DivFL ideal setting: one-step gradients from all clients
+        if "full_all" in self.selector.requires:
+            one_step = dataclasses.replace(cfg.local, epochs=1,
+                                           algo="fedavg")
+            lu1 = make_local_update(apply_fn, one_step)
+            self._grad_all = jax.jit(jax.vmap(
+                lambda p, x, y, m, r: _flatten_params(
+                    jax.tree_util.tree_map(
+                        lambda a, b: a - b, lu1(p, {}, x, y, m, r)[0], p)),
+                in_axes=(None, 0, 0, 0, 0)))
+        self.history: Dict[str, list] = {
+            "round": [], "train_loss": [], "selected": [],
+            "test_round": [], "test_loss": [], "test_acc": [],
+            "bias_entropy": [], "wall_s": [],
+        }
+
+    # ------------------------------------------------------------------
+    def run(self, progress: bool = False) -> Dict[str, list]:
+        cfg = self.cfg
+        lr0 = cfg.local.lr
+        for t in range(cfg.rounds):
+            t_start = time.perf_counter()
+            # paper's lr schedule: decay 0.5 every 10 rounds
+            decay = cfg.lr_decay ** (t // cfg.lr_decay_every)
+            if decay != 1.0:
+                self.local_spec = dataclasses.replace(cfg.local,
+                                                      lr=lr0 * decay)
+                self._lu_vmapped = jax.jit(jax.vmap(
+                    make_local_update(self.apply_fn, self.local_spec),
+                    in_axes=(None, 0, 0, 0, 0, 0))) \
+                    if t % cfg.lr_decay_every == 0 else self._lu_vmapped
+
+            ids = np.asarray(self.selector.select(t))
+            self.rng, kr = jax.random.split(self.rng)
+            rngs = jax.random.split(kr, len(ids))
+            extras = (_tree_stack_gather(self._extras, ids)
+                      if self._extras else {})
+            new_params, new_extras, metrics = self._lu_vmapped(
+                self.params, extras, self.x[ids], self.y[ids],
+                self.mask[ids], rngs)
+            if self._extras:
+                self._extras = _tree_stack_scatter(self._extras, ids,
+                                                   new_extras)
+            # Δb per participant (before aggregation overwrites params)
+            bias_updates = self._bias_updates(new_params)
+            # aggregate: θ^{t+1} = (1/K) Σ θ_k
+            self.params = jax.tree_util.tree_map(
+                lambda stacked: jnp.mean(stacked, axis=0), new_params)
+
+            kw: Dict[str, Any] = {}
+            if bias_updates is not None:
+                kw["bias_updates"] = np.asarray(bias_updates)
+            if "loss_all" in self.selector.requires:
+                losses, _ = self._eval_vmapped(self.params, self.x, self.y,
+                                               self.mask)
+                kw["losses"] = np.asarray(losses)
+            if "full_all" in self.selector.requires:
+                self.rng, kg = jax.random.split(self.rng)
+                g = self._grad_all(self.params, self.x, self.y, self.mask,
+                                   jax.random.split(kg, cfg.num_clients))
+                kw["full_updates"] = np.asarray(g)
+            elif "full_sel" in self.selector.requires:
+                flat_global = _flatten_params(self.params)
+                sel_updates = jax.vmap(
+                    lambda p: _flatten_params(p) - flat_global)(new_params)
+                kw["full_updates"] = np.asarray(sel_updates)
+            self.selector.update(t, list(ids), **kw)
+
+            self.history["round"].append(t)
+            self.history["train_loss"].append(
+                float(np.mean(np.asarray(metrics["train_loss"]))))
+            self.history["selected"].append(ids.tolist())
+            ent = getattr(self.selector, "estimated_entropies", lambda: None)()
+            self.history["bias_entropy"].append(
+                None if ent is None else ent.tolist())
+            self.history["wall_s"].append(time.perf_counter() - t_start)
+
+            if self.test is not None and (t % cfg.eval_every == 0
+                                          or t == cfg.rounds - 1):
+                tl, ta = self._eval(self.params, self.test["x"],
+                                    self.test["y"], self.test["mask"])
+                self.history["test_round"].append(t)
+                self.history["test_loss"].append(float(tl))
+                self.history["test_acc"].append(float(ta))
+                if progress:
+                    print(f"round {t:4d} loss={self.history['train_loss'][-1]:.4f} "
+                          f"test_acc={float(ta):.4f}", flush=True)
+        self.history["select_seconds"] = self.selector.select_seconds
+        self.history["update_seconds"] = self.selector.update_seconds
+        return self.history
+
+    # ------------------------------------------------------------------
+    def _bias_updates(self, new_params_stacked) -> Optional[np.ndarray]:
+        """Δb (or bias-free ΔW surrogate) per participant — (K, C)."""
+        def one(i):
+            pk = jax.tree_util.tree_map(lambda a: a[i], new_params_stacked)
+            return head_bias_update(self.params, pk)
+        first = one(0)
+        if first is None:
+            return None
+        k = jax.tree_util.tree_leaves(new_params_stacked)[0].shape[0]
+        return jnp.stack([one(i) for i in range(k)])
+
+
+def rounds_to_accuracy(history: Dict[str, list], target: float
+                       ) -> Optional[int]:
+    """First round at which test accuracy reached `target` (Table 2)."""
+    for r, a in zip(history["test_round"], history["test_acc"]):
+        if a >= target:
+            return int(r)
+    return None

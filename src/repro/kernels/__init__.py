@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot-spots:
+
+  hetero_entropy   — fused temperature-softmax entropy over class blocks
+                     (HiCS-FL server at LLM-vocab scale)
+  pairwise         — Eq. 9 distance: MXU-tiled Gram + arccos/λ|ΔĤ| epilogue
+  decode_attention — GQA flash-decode for the serving hot loop
+
+Each kernel has a pure-jnp oracle in ref.py; ops.py is the dispatching
+public API (TPU -> compiled Pallas, CPU -> interpret/oracle).
+"""
+from repro.kernels.ops import (estimate_entropies, gqa_decode_attention,
+                               pairwise_distances)
+
+__all__ = ["estimate_entropies", "gqa_decode_attention",
+           "pairwise_distances"]

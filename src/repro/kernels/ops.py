@@ -1,0 +1,59 @@
+"""Public kernel API with backend dispatch.
+
+On TPU the Pallas kernels run compiled; on CPU (this container) they
+run under ``interpret=True`` or fall back to the jnp oracle — both
+paths are bit-for-bit validated against ``ref.py`` by the test suite.
+
+    estimate_entropies(updates, T)          (N, C) -> (N,)
+    pairwise_distances(updates, T, lam)     (N, C) -> (N, N)   [Eq. 9]
+    gqa_decode_attention(q, k, v, length)   one-token flash decode
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.hetero_entropy import entropy_pallas
+from repro.kernels.pairwise import pairwise_distance_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def estimate_entropies(updates: jnp.ndarray, temperature: float,
+                       use_pallas: bool | None = None) -> jnp.ndarray:
+    """Ĥ over N clients' bias updates; Pallas on TPU, oracle on CPU."""
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return entropy_pallas(updates, temperature,
+                              interpret=not _on_tpu())
+    return ref.entropy_ref(updates, temperature)
+
+
+def pairwise_distances(updates: jnp.ndarray, temperature: float,
+                       lam: float = 10.0,
+                       use_pallas: bool | None = None) -> jnp.ndarray:
+    """Full Eq. 9 matrix: entropy pass + fused Gram/arccos kernel."""
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        interp = not _on_tpu()
+        h = entropy_pallas(updates, temperature, interpret=interp)
+        norms = jnp.linalg.norm(updates.astype(jnp.float32), axis=-1)
+        return pairwise_distance_pallas(updates, norms, h, lam=lam,
+                                        interpret=interp)
+    h = ref.entropy_ref(updates, temperature)
+    return ref.pairwise_distance_ref(updates, h, lam)
+
+
+def gqa_decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         length, scale: float | None = None,
+                         use_pallas: bool | None = None) -> jnp.ndarray:
+    """One-token GQA attention against a (B, S, KV, dh) cache."""
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return decode_attention_pallas(q, k, v, length, scale=scale,
+                                       interpret=not _on_tpu())
+    return ref.decode_attention_ref(q, k, v, length, scale=scale)

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: Eq. 9 pairwise client distance with fused epilogue.
+
+    D[u, k] = arccos( <Δb_u, Δb_k> / (|Δb_u||Δb_k|) ) + λ |Ĥ_u − Ĥ_k|
+
+Inputs are the (N, C) bias-update matrix (C = classes/vocab, up to
+256k), the per-row L2 norms (N,) and the estimated entropies (N,)
+(both O(N·C) streaming passes produced by ``ops.py``).  The kernel
+tiles the Gram product X Xᵀ for the MXU — (BN, BC) × (BC, BN) partial
+products accumulated in a VMEM f32 scratch over the C grid axis — and
+applies the normalize→clip→arccos→+λ|ΔĤ| epilogue on the last C block,
+so the (N, N) result is written to HBM exactly once and no (N, N)
+cosine intermediate ever exists.
+
+Grid: (row tiles i, col tiles j, C blocks); C is minor/sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pairwise_kernel(x_ref, xt_ref, norms_ref, normsT_ref, h_ref, hT_ref,
+                     o_ref, acc_ref, *, lam, eps, n_total, block_n):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = x_ref[...].astype(jnp.float32)       # (BN, BC) rows tile
+    b = xt_ref[...].astype(jnp.float32)      # (BN, BC) cols tile
+    acc_ref[...] += jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ci == nc - 1)
+    def _epilogue():
+        nr = norms_ref[...].astype(jnp.float32)      # (BN, 1)
+        ncol = normsT_ref[...].astype(jnp.float32)   # (BN, 1)
+        denom = jnp.maximum(nr, eps) * jnp.maximum(ncol, eps).T
+        cos = acc_ref[...] / denom
+        cos = jnp.clip(cos, -1.0 + 1e-7, 1.0 - 1e-7)
+        ang = jnp.arccos(cos)
+        # zero the true diagonal (only on diagonal tiles)
+        row = i * block_n + jax.lax.broadcasted_iota(jnp.int32, ang.shape, 0)
+        col = j * block_n + jax.lax.broadcasted_iota(jnp.int32, ang.shape, 1)
+        ang = jnp.where(row == col, 0.0, ang)
+        hr = h_ref[...].astype(jnp.float32)          # (BN, 1)
+        hc = hT_ref[...].astype(jnp.float32)         # (BN, 1)
+        o_ref[...] = ang + lam * jnp.abs(hr - hc.T)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("lam", "block_n", "block_c",
+                                    "interpret"))
+def pairwise_distance_pallas(updates: jnp.ndarray, norms: jnp.ndarray,
+                             entropies: jnp.ndarray, lam: float = 10.0,
+                             block_n: int = 128, block_c: int = 512,
+                             interpret: bool = True) -> jnp.ndarray:
+    """(N, C), (N,), (N,) -> (N, N) Eq. 9 distances (f32)."""
+    n, c = updates.shape
+    bn = min(block_n, max(8, -(-n // 8) * 8))
+    n_pad = -(-n // bn) * bn
+    c_pad = -(-c // block_c) * block_c
+    x = jnp.pad(updates, ((0, n_pad - n), (0, c_pad - c)))
+    # pad norms with 1s so padded rows don't divide by 0
+    nr = jnp.pad(norms.astype(jnp.float32), (0, n_pad - n),
+                 constant_values=1.0)[:, None]
+    h = jnp.pad(entropies.astype(jnp.float32), (0, n_pad - n))[:, None]
+    grid = (n_pad // bn, n_pad // bn, c_pad // block_c)
+    out = pl.pallas_call(
+        functools.partial(_pairwise_kernel, lam=lam, eps=1e-8,
+                          n_total=n, block_n=bn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, block_c), lambda i, j, k: (i, k)),  # rows
+            pl.BlockSpec((bn, block_c), lambda i, j, k: (j, k)),  # cols
+            pl.BlockSpec((bn, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j, k: (j, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j, k: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, n_pad), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bn, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, x, nr, nr, h, h)
+    return out[:n, :n]

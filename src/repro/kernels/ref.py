@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics contract: each kernel's test sweeps shapes and
+dtypes and asserts allclose against these functions, and the framework
+falls back to them on CPU (``repro.kernels.ops`` dispatches).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def entropy_ref(updates: jnp.ndarray, temperature: float) -> jnp.ndarray:
+    """H(softmax(v / T)) row-wise.  updates: (N, C) -> (N,) float32."""
+    u = updates.astype(jnp.float32) / temperature
+    u = u - jnp.max(u, axis=-1, keepdims=True)
+    e = jnp.exp(u)
+    z = jnp.sum(e, axis=-1)
+    s = jnp.sum(e * u, axis=-1)
+    return jnp.log(z) - s / z
+
+
+def pairwise_distance_ref(updates: jnp.ndarray, entropies: jnp.ndarray,
+                          lam: float, eps: float = 1e-8) -> jnp.ndarray:
+    """Eq. 9 distance matrix.  updates (N, C), entropies (N,) -> (N, N)."""
+    x = updates.astype(jnp.float32)
+    norms = jnp.linalg.norm(x, axis=-1, keepdims=True)
+    unit = x / jnp.clip(norms, eps, None)
+    cos = jnp.clip(unit @ unit.T, -1.0 + 1e-7, 1.0 - 1e-7)
+    ang = jnp.arccos(cos) * (1.0 - jnp.eye(x.shape[0]))
+    h = entropies.astype(jnp.float32)
+    return ang + lam * jnp.abs(h[:, None] - h[None, :])
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         length: jnp.ndarray | int,
+                         scale: float | None = None) -> jnp.ndarray:
+    """GQA one-token decode attention.
+
+    q: (B, H, dh); k/v: (B, S, KV, dh); length: valid cache length
+    (positions >= length are masked).  H must be a multiple of KV.
+    Returns (B, H, dh) float32.
+    """
+    B, H, dh = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    scale = (dh ** -0.5) if scale is None else scale
+    qf = q.astype(jnp.float32).reshape(B, KV, g, dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bngd,bsnd->bngs", qf, kf) * scale
+    pos = jnp.arange(S)
+    mask = pos[None, :] < jnp.asarray(length).reshape(-1, 1)
+    logits = jnp.where(mask[:, None, None, :], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bngs,bsnd->bngd", p, vf)
+    return out.reshape(B, H, dh)

@@ -1,0 +1,285 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes and record memory/cost/collective artifacts.
+
+MUST be run as a module entrypoint (`python -m repro.launch.dryrun`) — the
+two lines above run before any jax import so the 512 placeholder devices
+exist when jax initializes. Never import this module from tests.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh pod1
+  python -m repro.launch.dryrun --all [--mesh pod1|pod2] [--skip-existing]
+  python -m repro.launch.dryrun --summary
+
+Artifacts: benchmarks/artifacts/dryrun/<arch>__<shape>__<mesh>.json
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (make_prefill_step, make_serve_step,
+                                make_train_step)
+from repro.models import cache_specs, get_model, input_specs, supports_shape
+from repro.optim import adam
+from repro.roofline import HW_V5E, model_flops, parse_collectives, \
+    roofline_terms
+from repro.roofline.hlo_cost import analyze as hlo_analyze
+from repro.sharding import (ShardingPolicy, batch_pspecs, cache_pspecs,
+                            param_pspecs, to_shardings, use_policy)
+
+ART_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+
+
+def _sds_tree(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _mem_analysis(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return None
+    if ma is None:
+        return None
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out or None
+
+
+def _tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+def run_combo(arch: str, shape_name: str, mesh_name: str,
+              param_dtype=jnp.float32, policy_mode: str = "2d") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "mode": shape.mode, "policy": policy_mode}
+    if not supports_shape(cfg, shape):
+        rec["status"] = "skipped"
+        rec["reason"] = (f"long_context_mode={cfg.long_context_mode} "
+                         "(see DESIGN.md §6)")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "pod2"))
+    policy = ShardingPolicy(mesh, mode=policy_mode)
+    api = get_model(cfg)
+    long_context = shape.name == "long_500k"
+    batch_sds = input_specs(cfg, shape)
+
+    t0 = time.time()
+    with mesh, use_policy(policy):
+        if shape.mode == "train":
+            opt = adam(1e-4)
+            state_sds = jax.eval_shape(
+                lambda: {
+                    "params": api.init(jax.random.PRNGKey(0)),
+                    "opt": opt.init(
+                        jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))),
+                    "step": jnp.zeros((), jnp.int32),
+                })
+            state_ps = {
+                "params": param_pspecs(state_sds["params"], policy),
+                "opt": _opt_pspecs(state_sds["opt"], policy),
+                "step": jax.sharding.PartitionSpec(),
+            }
+            state_sh = to_shardings(state_ps, policy)
+            batch_sh = to_shardings(batch_pspecs(batch_sds, policy), policy)
+            step = make_train_step(api, opt, dtype=jnp.bfloat16)
+            jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_sds, batch_sds)
+            rec["state_bytes_global"] = _tree_bytes(state_sds)
+        elif shape.mode == "prefill":
+            params_sds = jax.eval_shape(
+                lambda: api.init(jax.random.PRNGKey(0)))
+            params_sds = jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, jnp.bfloat16)
+                if x.dtype == jnp.float32 else x, params_sds)
+            params_sh = to_shardings(param_pspecs(params_sds, policy), policy)
+            batch_sh = to_shardings(batch_pspecs(batch_sds, policy), policy)
+            step = make_prefill_step(api, dtype=jnp.bfloat16)
+            jitted = jax.jit(step, in_shardings=(params_sh, batch_sh))
+            lowered = jitted.lower(params_sds, batch_sds)
+            rec["state_bytes_global"] = _tree_bytes(params_sds)
+        else:  # decode
+            params_sds = jax.eval_shape(
+                lambda: api.init(jax.random.PRNGKey(0)))
+            params_sds = jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, jnp.bfloat16)
+                if x.dtype == jnp.float32 else x, params_sds)
+            cache_sds = _sds_tree(cache_specs(cfg, shape))
+            params_sh = to_shardings(param_pspecs(params_sds, policy), policy)
+            cache_sh = to_shardings(cache_pspecs(cache_sds, policy), policy)
+            batch_sh = to_shardings(batch_pspecs(batch_sds, policy), policy)
+            step = make_serve_step(api, long_context=long_context,
+                                   dtype=jnp.bfloat16)
+            jitted = jax.jit(step, in_shardings=(params_sh, cache_sh,
+                                                 batch_sh),
+                             out_shardings=(None, cache_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_sds, cache_sds, batch_sds)
+            rec["state_bytes_global"] = _tree_bytes(params_sds)
+            rec["cache_bytes_global"] = _tree_bytes(cache_sds)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+    n_chips = mesh.devices.size
+    rec["chips"] = int(n_chips)
+    mem = _mem_analysis(compiled)
+    if mem:
+        rec["memory_analysis"] = mem
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec["xla_cost_analysis"] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        }
+    except Exception:
+        pass
+
+    # Trip-count-weighted accounting over the partitioned module (XLA's own
+    # cost_analysis counts while bodies once — useless for scanned models).
+    hlo = compiled.as_text()
+    parsed = hlo_analyze(hlo)
+    flops = parsed["flops"]
+    byts = parsed["hbm_bytes"]
+    rec["hlo_flops_per_chip"] = flops
+    rec["hlo_bytes_per_chip"] = byts
+    rec["collectives_bytes"] = parsed["collective_bytes"]
+    rec["collectives_bytes"]["total_weighted"] = \
+        parsed["collective_total_weighted"]
+    rec["hlo_num_lines"] = hlo.count("\n")
+
+    terms = roofline_terms(flops, byts,
+                           parsed["collective_total_weighted"], HW_V5E)
+    mf = model_flops(cfg, shape, shape.mode)
+    terms["model_flops_global"] = mf
+    terms["model_flops_per_chip"] = mf / n_chips
+    terms["useful_flops_ratio"] = (mf / n_chips / flops) if flops else 0.0
+    rec["roofline"] = terms
+    rec["status"] = "ok"
+    return rec
+
+
+def _opt_pspecs(opt_sds, policy):
+    """Adam m/v mirror the param partitioning; count is replicated."""
+    from jax.sharding import PartitionSpec as P
+    out = {}
+    for k, v in opt_sds.items():
+        if k == "count":
+            out[k] = P()
+        else:
+            out[k] = param_pspecs(v, policy)
+    return out
+
+
+def combos(only_arch=None, only_shape=None, only_mesh=None):
+    for arch in list_archs():
+        cfg = get_config(arch)
+        if cfg.kind == "classifier":
+            continue
+        if only_arch and arch != only_arch:
+            continue
+        for shape in SHAPES:
+            if only_shape and shape != only_shape:
+                continue
+            for mesh in ("pod1", "pod2"):
+                if only_mesh and mesh != only_mesh:
+                    continue
+                yield arch, shape, mesh
+
+
+def art_path(arch, shape, mesh, suffix="") -> Path:
+    return ART_DIR / f"{arch}__{shape}__{mesh}{suffix}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["pod1", "pod2"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--summary", action="store_true")
+    ap.add_argument("--policy", default="2d",
+                    choices=["2d", "fsdp", "ep", "auto"],
+                    help="sharding scheme (§Perf); 'auto' applies the "
+                         "§Perf recommendation (fsdp for train shapes, "
+                         "2d otherwise); artifacts for non-default "
+                         "policies get an __<policy> suffix")
+    args = ap.parse_args()
+
+    ART_DIR.mkdir(parents=True, exist_ok=True)
+    if args.summary:
+        rows = []
+        for p in sorted(ART_DIR.glob("*.json")):
+            rec = json.loads(p.read_text())
+            r = rec.get("roofline", {})
+            rows.append((rec["arch"], rec["shape"], rec["mesh"],
+                         rec["status"],
+                         r.get("compute_s"), r.get("memory_s"),
+                         r.get("collective_s"), r.get("bottleneck"),
+                         r.get("useful_flops_ratio")))
+        hdr = ("arch", "shape", "mesh", "status", "compute_s", "memory_s",
+               "collective_s", "bottleneck", "useful_ratio")
+        print(",".join(hdr))
+        for row in rows:
+            print(",".join("" if v is None else
+                           (f"{v:.4g}" if isinstance(v, float) else str(v))
+                           for v in row))
+        return
+
+    todo = list(combos(args.arch, args.shape, args.mesh))
+    if not todo:
+        raise SystemExit("nothing to do")
+    suffix = "" if args.policy == "2d" else f"__{args.policy}"
+    for arch, shape, mesh in todo:
+        # 'auto' = the §Perf production recommendation
+        policy = args.policy
+        if policy == "auto":
+            policy = "fsdp" if SHAPES[shape].mode == "train" else "2d"
+        path = art_path(arch, shape, mesh, suffix)
+        if args.skip_existing and path.exists():
+            rec = json.loads(path.read_text())
+            if rec.get("status") in ("ok", "skipped"):
+                continue
+        print(f"=== dryrun {arch} x {shape} x {mesh} ({policy})",
+              flush=True)
+        try:
+            rec = run_combo(arch, shape, mesh, policy_mode=policy)
+        except Exception as e:  # record failures as artifacts too
+            rec = {"arch": arch, "shape": shape, "mesh": mesh,
+                   "status": "error", "error": repr(e),
+                   "traceback": traceback.format_exc()[-4000:]}
+        path.write_text(json.dumps(rec, indent=1))
+        print(f"    -> {rec['status']}", flush=True)
+        if rec["status"] == "error":
+            print(rec["error"], flush=True)
+
+
+if __name__ == "__main__":
+    main()

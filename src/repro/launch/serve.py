@@ -1,0 +1,91 @@
+"""Batched serving driver: prefill a batch of requests, then decode with
+the GQA flash-decode path.  On CPU this runs reduced configs; on TPU the
+same code pjit's over the production mesh with the sharding policy used
+by the dry-run.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import make_prefill_step, make_serve_step
+from repro.models import get_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    api = get_model(cfg)
+    rng = np.random.default_rng(args.seed)
+    key = jax.random.PRNGKey(args.seed)
+    params = api.init(key)
+
+    B, S = args.batch, args.prompt_len
+    if cfg.kind == "vlm":
+        P = cfg.vlm.num_patches
+        batch = {"patches": jnp.asarray(
+                     rng.normal(size=(B, P, cfg.vlm.patch_embed_dim)),
+                     jnp.float32),
+                 "tokens": jnp.asarray(
+                     rng.integers(0, cfg.vocab_size, (B, S - P)), jnp.int32)}
+    elif cfg.kind == "audio":
+        F = min(cfg.encdec.max_source_frames, S)
+        batch = {"frames": jnp.asarray(
+                     rng.normal(size=(B, F, cfg.d_model)), jnp.float32),
+                 "tokens": jnp.asarray(
+                     rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+    else:
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+
+    mesh = make_host_mesh()
+    prefill = jax.jit(make_prefill_step(api, dtype=jnp.float32,
+                                        cache_extra=args.gen))
+    serve = jax.jit(make_serve_step(api, dtype=jnp.float32),
+                    donate_argnums=(1,))
+    with mesh:
+        t0 = time.time()
+        token, cache = prefill(params, batch)
+        token.block_until_ready()
+        t_prefill = time.time() - t0
+        out_tokens = [np.asarray(token)]
+        t0 = time.time()
+        pos = S
+        for i in range(args.gen - 1):
+            token, cache = serve(params, cache,
+                                 {"token": token,
+                                  "pos": jnp.asarray(pos, jnp.int32)})
+            out_tokens.append(np.asarray(token))
+            pos += 1
+        token.block_until_ready()
+        t_decode = time.time() - t0
+    gen = np.concatenate(out_tokens, axis=1)
+    print(f"arch={cfg.name} batch={B} prompt={S} gen={args.gen}")
+    print(f"prefill: {t_prefill*1e3:.1f} ms   "
+          f"decode: {t_decode/max(1,args.gen-1)*1e3:.1f} ms/token")
+    print("generated token ids (first request):", gen[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Step builders shared by the training driver, the serving driver and the
+multi-pod dry-run: train_step (fwd + bwd + optimizer), prefill_step and
+serve_step (one-token decode + greedy sample).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import apply_updates, clip_by_global_norm
+
+
+def make_train_step(api, optimizer, *, dtype=jnp.bfloat16,
+                    clip_norm: float = 1.0,
+                    cast_params_bf16: bool = False):
+    """cast_params_bf16: mixed-precision compute copy — f32 master params
+    are cast to bf16 ONCE per step before the layer scan, so the FSDP
+    all-gathers and the gradient all-reduces move bf16 instead of f32
+    (2x wire reduction; §Perf iteration 2 in EXPERIMENTS.md).  The
+    optimizer still updates the f32 masters."""
+    def train_step(state, batch):
+        def lf(p):
+            if cast_params_bf16:
+                p = jax.tree_util.tree_map(
+                    lambda x: x.astype(jnp.bfloat16)
+                    if x.dtype == jnp.float32 else x, p)
+            return api.loss(p, batch, dtype=dtype)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            lf, has_aux=True)(state["params"])
+        if cast_params_bf16:
+            grads = jax.tree_util.tree_map(
+                lambda g, x: g.astype(x.dtype), grads, state["params"])
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        updates, opt = optimizer.update(grads, state["opt"], state["params"])
+        params = apply_updates(state["params"], updates)
+        metrics = dict(metrics, grad_norm=gnorm)
+        new_state = {"params": params, "opt": opt,
+                     "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_init_state(api, optimizer):
+    def init_state(rng):
+        params = api.init(rng)
+        return {"params": params, "opt": optimizer.init(params),
+                "step": jnp.zeros((), jnp.int32)}
+    return init_state
+
+
+def make_prefill_step(api, *, dtype=jnp.bfloat16, cache_extra: int = 0):
+    """cache_extra: decode headroom slots appended to the KV cache — set
+    to the number of tokens you intend to generate after the prefill."""
+    def prefill_step(params, batch):
+        logits, cache = api.prefill(params, batch, dtype=dtype,
+                                    cache_extra=cache_extra)
+        token = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return token[:, None], cache
+    return prefill_step
+
+
+def make_serve_step(api, *, long_context: bool = False, dtype=jnp.bfloat16):
+    def serve_step(params, cache, batch):
+        logits, cache = api.decode_step(params, cache, batch,
+                                        long_context=long_context,
+                                        dtype=dtype)
+        token = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return token[:, None], cache
+    return serve_step

@@ -1,0 +1,10 @@
+from repro.models.registry import (
+    ModelApi,
+    cache_specs,
+    get_model,
+    input_specs,
+    supports_shape,
+)
+
+__all__ = ["ModelApi", "cache_specs", "get_model", "input_specs",
+           "supports_shape"]

@@ -1,0 +1,118 @@
+"""The paper's client models: a small CNN (App. A.1.1) and an MLP.
+
+The output layer is named ``lm_head`` = {'w': (h, C), 'b': (C,)} so the
+HiCS-FL server reads the bias update of every model in the framework
+through one accessor (`repro.core.hetero.bias_update`).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init
+from repro.models.losses import classifier_loss
+
+IMG = 14  # synthetic "image" side for the CNN
+
+
+def init_mlp_params(key, cfg, input_dim: int = 64) -> dict:
+    ks = jax.random.split(key, 3)
+    h = cfg.d_model
+    return {
+        "fc1": {"w": dense_init(ks[0], (input_dim, h)),
+                "b": jnp.zeros((h,), jnp.float32)},
+        "fc2": {"w": dense_init(ks[1], (h, h)),
+                "b": jnp.zeros((h,), jnp.float32)},
+        "lm_head": {"w": dense_init(ks[2], (h, cfg.vocab_size)),
+                    "b": jnp.zeros((cfg.vocab_size,), jnp.float32)},
+    }
+
+
+def mlp_apply(params, x) -> jnp.ndarray:
+    """x: (B, input_dim) -> logits (B, C)."""
+    h = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    h = jax.nn.relu(h @ params["fc2"]["w"] + params["fc2"]["b"])
+    return h @ params["lm_head"]["w"] + params["lm_head"]["b"]
+
+
+def init_cnn_params(key, cfg) -> dict:
+    ks = jax.random.split(key, 4)
+    c1, c2 = 16, cfg.d_model          # conv channels
+    side = -(-IMG // 2)               # SAME pooling: ceil(IMG/2) twice
+    side = -(-side // 2)
+    flat = side * side * c2
+    return {
+        "conv1": {"w": 0.1 * jax.random.normal(ks[0], (5, 5, 1, c1)),
+                  "b": jnp.zeros((c1,), jnp.float32)},
+        "conv2": {"w": 0.1 * jax.random.normal(ks[1], (5, 5, c1, c2)),
+                  "b": jnp.zeros((c2,), jnp.float32)},
+        "fc": {"w": dense_init(ks[2], (flat, cfg.d_ff)),
+               "b": jnp.zeros((cfg.d_ff,), jnp.float32)},
+        "lm_head": {"w": dense_init(ks[3], (cfg.d_ff, cfg.vocab_size)),
+                    "b": jnp.zeros((cfg.vocab_size,), jnp.float32)},
+    }
+
+
+def _conv(x, w, b):
+    y = lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return jax.nn.relu(y + b)
+
+
+def _pool(x):
+    return lax.reduce_window(x, -jnp.inf, lax.max, (1, 2, 2, 1),
+                             (1, 2, 2, 1), "SAME")
+
+
+def cnn_apply(params, x) -> jnp.ndarray:
+    """x: (B, IMG*IMG) flattened synthetic image -> logits (B, C)."""
+    B = x.shape[0]
+    img = x.reshape(B, IMG, IMG, 1)
+    h = _pool(_conv(img, params["conv1"]["w"], params["conv1"]["b"]))
+    h = _pool(_conv(h, params["conv2"]["w"], params["conv2"]["b"]))
+    h = h.reshape(B, -1)
+    h = jax.nn.relu(h @ params["fc"]["w"] + params["fc"]["b"])
+    return h @ params["lm_head"]["w"] + params["lm_head"]["b"]
+
+
+def mlp_features(params, x) -> jnp.ndarray:
+    """Penultimate activations (Moon's contrastive anchor)."""
+    h = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return jax.nn.relu(h @ params["fc2"]["w"] + params["fc2"]["b"])
+
+
+def cnn_features(params, x) -> jnp.ndarray:
+    B = x.shape[0]
+    img = x.reshape(B, IMG, IMG, 1)
+    h = _pool(_conv(img, params["conv1"]["w"], params["conv1"]["b"]))
+    h = _pool(_conv(h, params["conv2"]["w"], params["conv2"]["b"]))
+    h = h.reshape(B, -1)
+    return jax.nn.relu(h @ params["fc"]["w"] + params["fc"]["b"])
+
+
+def make_classifier(cfg, input_dim: int = 64):
+    """Returns (init_fn(key), apply_fn(params, x), loss_fn(params, batch))."""
+    if cfg.name.startswith("paper-cnn"):
+        init = lambda key: init_cnn_params(key, cfg)
+        apply, features = cnn_apply, cnn_features
+    else:
+        init = lambda key: init_mlp_params(key, cfg, input_dim)
+        apply, features = mlp_apply, mlp_features
+
+    def loss_fn(params, batch):
+        logits = apply(params, batch["x"])
+        return classifier_loss(logits, batch["y"])
+
+    return init, apply, loss_fn
+
+
+def make_classifier_with_features(cfg, input_dim: int = 64):
+    """(init, apply, features) — features feed Moon's contrastive term."""
+    init, apply, _ = make_classifier(cfg, input_dim)
+    features = cnn_features if cfg.name.startswith("paper-cnn") \
+        else mlp_features
+    return init, apply, features

@@ -1,0 +1,176 @@
+"""Encoder-decoder backbone for seamless-m4t-medium (audio → text).
+
+The audio frontend (mel-spectrogram + conv feature extractor) is a STUB per
+the assignment carve-out: the model consumes precomputed frame embeddings
+``frames: (B, F, d_model)``. We implement the 12L bidirectional encoder and
+the 12L causal decoder with cross-attention, vocab 256,206.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.losses import chunked_lm_loss
+from repro.sharding import constrain, constrain_attn_q
+
+
+def _init_enc_layer(key, cfg):
+    ks = jax.random.split(key, 4)
+    return {
+        "ln1": L.init_norm(ks[0], cfg.d_model, cfg.norm),
+        "attn": L.init_attention(ks[1], cfg),
+        "ln2": L.init_norm(ks[2], cfg.d_model, cfg.norm),
+        "mlp": L.init_mlp(ks[3], cfg.d_model, cfg.mlp == "gelu" and cfg.d_ff
+                          or cfg.d_ff, cfg.mlp),
+    }
+
+
+def _init_dec_layer(key, cfg):
+    ks = jax.random.split(key, 6)
+    return {
+        "ln1": L.init_norm(ks[0], cfg.d_model, cfg.norm),
+        "attn": L.init_attention(ks[1], cfg),
+        "ln_x": L.init_norm(ks[2], cfg.d_model, cfg.norm),
+        "xattn": L.init_cross_attention(ks[3], cfg),
+        "ln2": L.init_norm(ks[4], cfg.d_model, cfg.norm),
+        "mlp": L.init_mlp(ks[5], cfg.d_model, cfg.d_ff, cfg.mlp),
+    }
+
+
+def init_params(key, cfg) -> dict:
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[0], cfg.encdec.encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.num_layers)
+    d = cfg.d_model
+    return {
+        "embed": 0.02 * jax.random.normal(ks[2], (cfg.vocab_size, d)),
+        "encoder": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "enc_norm": L.init_norm(ks[3], d, cfg.norm),
+        "decoder": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "final_norm": L.init_norm(ks[4], d, cfg.norm),
+        "lm_head": {
+            "w": L.dense_init(ks[5], (d, cfg.vocab_size)),
+            **({"b": jnp.zeros((cfg.vocab_size,), jnp.float32)}
+               if cfg.lm_head_bias else {}),
+        },
+    }
+
+
+def encode(params, frames, cfg, *, q_chunk: int = 128):
+    """frames: (B, F, d) stub embeddings -> encoder output (B, F, d)."""
+    x = constrain(frames, "batch", "seq", "embed")
+
+    def body(carry, lp):
+        h = L.apply_norm(carry, lp["ln1"], cfg.norm)
+        positions = jnp.arange(carry.shape[1])[None, :]
+        q, k, v = L._project_qkv(lp["attn"], h, cfg, positions)
+        q = constrain_attn_q(q)
+        a = L.full_attention(q, k, v, causal=False, q_chunk=q_chunk)
+        a = a.reshape(carry.shape[0], carry.shape[1], -1)
+        y = carry + a @ lp["attn"]["wo"].astype(carry.dtype)
+        h = L.apply_norm(y, lp["ln2"], cfg.norm)
+        return y + L.mlp_block(lp["mlp"], h, cfg.mlp), None
+
+    x, _ = lax.scan(jax.checkpoint(body), x, params["encoder"])
+    return L.apply_norm(x, params["enc_norm"], cfg.norm)
+
+
+def decode_train(params, tokens, enc_out, cfg, *, q_chunk: int = 128,
+                 collect_kv: bool = False):
+    """Teacher-forced decoder pass. Returns (hidden, kv or None)."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(enc_out.dtype)
+    x = constrain(x, "batch", "seq", "embed")
+
+    def body(carry, lp):
+        h = L.apply_norm(carry, lp["ln1"], cfg.norm)
+        positions = jnp.arange(carry.shape[1])[None, :]
+        q, k, v = L._project_qkv(lp["attn"], h, cfg, positions)
+        q = constrain_attn_q(q)
+        a = L.full_attention(q, k, v, causal=True, q_chunk=q_chunk)
+        a = a.reshape(carry.shape[0], carry.shape[1], -1)
+        y = carry + a @ lp["attn"]["wo"].astype(carry.dtype)
+        h = L.apply_norm(y, lp["ln_x"], cfg.norm)
+        ek, ev = L.cross_kv(lp["xattn"], enc_out, cfg)
+        y = y + L.cross_attention_block(lp["xattn"], h, ek, ev, cfg)
+        h = L.apply_norm(y, lp["ln2"], cfg.norm)
+        y = y + L.mlp_block(lp["mlp"], h, cfg.mlp)
+        ys = (k, v, ek, ev) if collect_kv else None
+        return y, ys
+
+    x, kv = lax.scan(jax.checkpoint(body), x, params["decoder"])
+    return L.apply_norm(x, params["final_norm"], cfg.norm), kv
+
+
+def loss_fn(params, batch, cfg, *, dtype=jnp.float32, loss_chunk: int = 512):
+    enc = encode(params, batch["frames"].astype(dtype), cfg)
+    x, _ = decode_train(params, batch["tokens"], enc, cfg)
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(batch["targets"], jnp.float32)
+    loss, metrics = chunked_lm_loss(
+        x, params["lm_head"]["w"], params["lm_head"].get("b"),
+        batch["targets"], mask, chunk=loss_chunk)
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def init_cache(cfg, batch: int, cache_len: int, source_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    KV, dh = cfg.num_kv_heads, cfg.resolved_head_dim()
+    Lyr = cfg.num_layers
+    return {
+        "k": jnp.zeros((Lyr, batch, cache_len, KV, dh), dtype),
+        "v": jnp.zeros((Lyr, batch, cache_len, KV, dh), dtype),
+        "xk": jnp.zeros((Lyr, batch, source_len, KV, dh), dtype),
+        "xv": jnp.zeros((Lyr, batch, source_len, KV, dh), dtype),
+    }
+
+
+def prefill(params, batch, cfg, *, dtype=jnp.float32, cache_extra: int = 0):
+    enc = encode(params, batch["frames"].astype(dtype), cfg)
+    x, kv = decode_train(params, batch["tokens"], enc, cfg, collect_kv=True)
+    logits = _head(params, x[:, -1:, :])
+    k, v, ek, ev = kv
+    if cache_extra:  # headroom for decode_step writes (self-attn only —
+        pad = [(0, 0)] * k.ndim  # cross-attn K/V never grow)
+        pad[2] = (0, cache_extra)
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    cache = {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16),
+             "xk": ek.astype(jnp.bfloat16), "xv": ev.astype(jnp.bfloat16)}
+    return logits, cache
+
+
+def decode_step(params, cache, batch, cfg, *, dtype=jnp.float32):
+    """One decoder token against self-attn + cross-attn caches."""
+    token, pos = batch["token"], batch["pos"]
+    x = jnp.take(params["embed"], token, axis=0).astype(dtype)
+
+    def body(carry, xs):
+        lp, kc, vc, xk, xv = xs
+        h = L.apply_norm(carry, lp["ln1"], cfg.norm)
+        a, (kc, vc) = L.attention_decode_block(lp["attn"], h, cfg, kc, vc,
+                                               pos)
+        y = carry + a
+        h = L.apply_norm(y, lp["ln_x"], cfg.norm)
+        y = y + L.cross_attention_block(lp["xattn"], h, xk.astype(dtype),
+                                        xv.astype(dtype), cfg)
+        h = L.apply_norm(y, lp["ln2"], cfg.norm)
+        y = y + L.mlp_block(lp["mlp"], h, cfg.mlp)
+        return y, (kc, vc)
+
+    x, (ks, vs) = lax.scan(
+        body, x,
+        (params["decoder"], cache["k"], cache["v"], cache["xk"], cache["xv"]))
+    x = L.apply_norm(x, params["final_norm"], cfg.norm)
+    return _head(params, x), {"k": ks, "v": vs,
+                              "xk": cache["xk"], "xv": cache["xv"]}
+
+
+def _head(params, x):
+    logits = (x @ params["lm_head"]["w"].astype(x.dtype)).astype(jnp.float32)
+    b = params["lm_head"].get("b")
+    return logits + b if b is not None else logits

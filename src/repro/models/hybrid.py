@@ -1,0 +1,209 @@
+"""Zamba2-style hybrid: Mamba2 backbone + periodically applied *shared*
+(weight-tied) attention blocks (two alternating shared blocks).
+
+Layout: before every ``attn_period``-th mamba layer, the shared transformer
+block (attention + MLP) for ``site % num_shared_blocks`` is applied. Weights
+are shared across sites but each site keeps its own KV cache at decode time.
+The mamba stack is scanned in per-group chunks so HLO stays compact while
+FLOPs remain honest (no lax.cond double-counting).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models.losses import chunked_lm_loss
+from repro.sharding import constrain
+
+
+def group_sizes(cfg) -> List[int]:
+    period = cfg.hybrid.attn_period
+    n, out = cfg.num_layers, []
+    while n > 0:
+        out.append(min(period, n))
+        n -= period
+    return out
+
+
+def num_attn_sites(cfg) -> int:
+    return len(group_sizes(cfg))
+
+
+def _init_shared_block(key, cfg):
+    ks = jax.random.split(key, 4)
+    return {
+        "ln1": L.init_norm(ks[0], cfg.d_model, cfg.norm),
+        "attn": L.init_attention(ks[1], cfg),
+        "ln2": L.init_norm(ks[2], cfg.d_model, cfg.norm),
+        "mlp": L.init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.mlp),
+    }
+
+
+def init_params(key, cfg) -> dict:
+    ks = jax.random.split(key, 5)
+    layer_keys = jax.random.split(ks[0], cfg.num_layers)
+    mamba_stack = jax.vmap(lambda k: M.init_layer(k, cfg))(layer_keys)
+    shared_keys = jax.random.split(ks[1], cfg.hybrid.num_shared_blocks)
+    shared = jax.vmap(lambda k: _init_shared_block(k, cfg))(shared_keys)
+    d = cfg.d_model
+    return {
+        "embed": 0.02 * jax.random.normal(ks[2], (cfg.vocab_size, d)),
+        "mamba": mamba_stack,
+        "shared": shared,
+        "final_norm": L.init_norm(ks[3], d, cfg.norm),
+        "lm_head": {
+            "w": L.dense_init(ks[4], (d, cfg.vocab_size)),
+            **({"b": jnp.zeros((cfg.vocab_size,), jnp.float32)}
+               if cfg.lm_head_bias else {}),
+        },
+    }
+
+
+def _shared_site_params(params, site: int, cfg):
+    idx = site % cfg.hybrid.num_shared_blocks
+    return jax.tree_util.tree_map(lambda a: a[idx], params["shared"])
+
+
+def _slice_stack(stack, start: int, size: int):
+    return jax.tree_util.tree_map(lambda a: a[start:start + size], stack)
+
+
+# ---------------------------------------------------------------------------
+# Train / prefill forward
+# ---------------------------------------------------------------------------
+
+
+def forward(params, tokens, cfg, *, dtype=jnp.float32, window: int = 0,
+            q_chunk: int = 128, collect_cache: bool = False):
+    """Returns (hidden, cache or None). cache: {'kv': [(k,v)...] per site,
+    'mamba': list of per-group stacked mamba caches}."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    x = constrain(x, "batch", "seq", "embed")
+    kv_sites, mamba_caches = [], []
+
+    def mamba_scan_body(carry, lp):
+        h = L.rms_norm(carry, lp["ln"]["scale"])
+        out, cache = M.mixer_apply(lp, h, cfg, None)
+        y = carry + out
+        return y, cache if collect_cache else None
+
+    start = 0
+    for site, gs in enumerate(group_sizes(cfg)):
+        sp = _shared_site_params(params, site, cfg)
+        h = L.apply_norm(x, sp["ln1"], cfg.norm)
+        a, (k, v) = L.attention_block(sp["attn"], h, cfg, window=window,
+                                      q_chunk=q_chunk)
+        x = x + a
+        h = L.apply_norm(x, sp["ln2"], cfg.norm)
+        x = x + L.mlp_block(sp["mlp"], h, cfg.mlp)
+        if collect_cache:
+            kv_sites.append((k, v))
+        group = _slice_stack(params["mamba"], start, gs)
+        x, mc = lax.scan(jax.checkpoint(mamba_scan_body), x, group)
+        if collect_cache:
+            mamba_caches.append(mc)
+        start += gs
+    x = L.apply_norm(x, params["final_norm"], cfg.norm)
+    cache = None
+    if collect_cache:
+        cache = {"kv": kv_sites, "mamba": mamba_caches}
+    return x, cache
+
+
+def loss_fn(params, batch, cfg, *, dtype=jnp.float32, window: int = 0,
+            loss_chunk: int = 512):
+    x, _ = forward(params, batch["tokens"], cfg, dtype=dtype, window=window)
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(batch["targets"], jnp.float32)
+    loss, metrics = chunked_lm_loss(
+        x, params["lm_head"]["w"], params["lm_head"].get("b"),
+        batch["targets"], mask, chunk=loss_chunk)
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16) -> dict:
+    sites = num_attn_sites(cfg)
+    KV, dh = cfg.num_kv_heads, cfg.resolved_head_dim()
+    mamba = jax.vmap(lambda _: M.init_cache_layer(cfg, batch, dtype))(
+        jnp.arange(cfg.num_layers))
+    return {
+        "k": jnp.zeros((sites, batch, cache_len, KV, dh), dtype),
+        "v": jnp.zeros((sites, batch, cache_len, KV, dh), dtype),
+        "mamba": mamba,
+    }
+
+
+def prefill(params, batch, cfg, *, dtype=jnp.float32, window: int = 0,
+            q_chunk: int = 128, cache_extra: int = 0):
+    x, cache = forward(params, batch["tokens"], cfg, dtype=dtype,
+                       window=window, q_chunk=q_chunk, collect_cache=True)
+    logits = _head(params, x[:, -1:, :])
+    ks = jnp.stack([k for k, _ in cache["kv"]]).astype(jnp.bfloat16)
+    vs = jnp.stack([v for _, v in cache["kv"]]).astype(jnp.bfloat16)
+    if cache_extra:  # decode headroom (see transformer._pad_cache_seq)
+        pad = [(0, 0)] * ks.ndim
+        pad[2] = (0, cache_extra)
+        ks, vs = jnp.pad(ks, pad), jnp.pad(vs, pad)
+    groups = cache["mamba"]
+    mamba = jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *groups)
+    return logits, {"k": ks, "v": vs, "mamba": mamba}
+
+
+def decode_step(params, cache, batch, cfg, *, window: int = 0,
+                ring: bool = False, dtype=jnp.float32):
+    token, pos = batch["token"], batch["pos"]
+    x = jnp.take(params["embed"], token, axis=0).astype(dtype)
+    new_k, new_v = [], []
+    mamba_out = []
+
+    def mamba_step_body(carry, xs):
+        lp, lc = xs
+        h = L.rms_norm(carry, lp["ln"]["scale"])
+        out, lc = M.mixer_apply(lp, h, cfg, lc)
+        return carry + out, lc
+
+    start = 0
+    for site, gs in enumerate(group_sizes(cfg)):
+        sp = _shared_site_params(params, site, cfg)
+        h = L.apply_norm(x, sp["ln1"], cfg.norm)
+        a, (kc, vc) = L.attention_decode_block(
+            sp["attn"], h, cfg, cache["k"][site], cache["v"][site], pos,
+            window=window, ring=ring)
+        new_k.append(kc)
+        new_v.append(vc)
+        x = x + a
+        h = L.apply_norm(x, sp["ln2"], cfg.norm)
+        x = x + L.mlp_block(sp["mlp"], h, cfg.mlp)
+        group = _slice_stack(params["mamba"], start, gs)
+        gcache = _slice_stack(cache["mamba"], start, gs)
+        x, gcache = lax.scan(mamba_step_body, x, (group, gcache))
+        mamba_out.append(gcache)
+        start += gs
+    x = L.apply_norm(x, params["final_norm"], cfg.norm)
+    logits = _head(params, x)
+    new_cache = {
+        "k": jnp.stack(new_k),
+        "v": jnp.stack(new_v),
+        "mamba": jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *mamba_out),
+    }
+    return logits, new_cache
+
+
+def _head(params, x):
+    logits = (x @ params["lm_head"]["w"].astype(x.dtype)).astype(jnp.float32)
+    b = params["lm_head"].get("b")
+    return logits + b if b is not None else logits

@@ -1,0 +1,321 @@
+"""Shared neural-net layers: norms, RoPE, attention (train/prefill/decode),
+MLP variants. Pure-functional: params are nested dicts of jnp arrays.
+
+Memory discipline: attention never materializes a (Tq, Tk) score tensor for
+large Tq — the query axis is processed in chunks via ``lax.scan`` (lazy
+softmax is unnecessary because each chunk sees the full, masked key axis;
+the per-chunk score block is O(Cq * Tk) and bounded). Decode (Tq == 1)
+attends against a (possibly ring-buffered) KV cache.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype=jnp.float32, scale: Optional[float] = None):
+    """Truncated-normal fan-in init (matches common LM init)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(x, p, kind: str):
+    if kind == "rmsnorm":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+def init_norm(key, d, kind: str):
+    del key
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)           # (head_dim // 2,)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., T, H, dh); positions: broadcastable to (..., T)."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)          # (dh//2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, dh//2)
+    cos = jnp.cos(angles)[..., None, :]          # (..., T, 1, dh//2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    rx1 = x1 * cos - x2 * sin
+    rx2 = x2 * cos + x1 * sin
+    return jnp.concatenate([rx1, rx2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q, k, scale):
+    """q: (B, Tq, KV, G, dh), k: (B, Tk, KV, dh) -> (B, KV, G, Tq, Tk) f32."""
+    return jnp.einsum("bqkgd,btkd->bkgqt", q, k,
+                      preferred_element_type=jnp.float32) * scale
+
+
+def _gqa_out(p, v):
+    """p: (B, KV, G, Tq, Tk) f32, v: (B, Tk, KV, dh) -> (B, Tq, KV, G, dh)."""
+    return jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v.dtype), v)
+
+
+def full_attention(q, k, v, *, causal: bool, window: int = 0,
+                   q_offset=0, q_chunk: int = 128):
+    """Attention for Tq > 1 (train / prefill).
+
+    q: (B, Tq, H, dh); k, v: (B, Tk, KV, dh). Returns (B, Tq, H, dh).
+    ``window > 0`` enables sliding-window masking (positions within
+    [pos - window + 1, pos]). ``q_offset`` is the global position of q[0]
+    relative to k[0] (0 for self-attention over the same span).
+    """
+    B, Tq, H, dh = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(B, Tq, KV, G, dh)
+    kpos = jnp.arange(Tk)
+
+    def attend(qc, qpos):
+        s = _gqa_scores(qc, k, scale)            # (B, KV, G, Cq, Tk)
+        if causal:
+            m = qpos[:, None] + q_offset >= kpos[None, :]
+            if window:
+                m &= qpos[:, None] + q_offset < kpos[None, :] + window
+            s = jnp.where(m[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return _gqa_out(p, v).reshape(qc.shape[0], qc.shape[1], H, dh)
+
+    if Tq <= q_chunk:
+        return attend(qg, jnp.arange(Tq))
+
+    if Tq % q_chunk:
+        raise ValueError(f"Tq={Tq} not divisible by q_chunk={q_chunk}")
+    nc = Tq // q_chunk
+    qcs = qg.reshape(B, nc, q_chunk, KV, G, dh).transpose(1, 0, 2, 3, 4, 5)
+
+    def body(_, xs):
+        qc, start = xs
+        return None, attend(qc, start + jnp.arange(q_chunk))
+
+    starts = jnp.arange(nc) * q_chunk
+    _, out = lax.scan(body, None, (qcs, starts))    # (nc, B, Cq, H, dh)
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, Tq, H, dh)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0,
+                     ring: bool = False):
+    """Single-token attention against a KV cache.
+
+    q: (B, 1, H, dh); caches: (B, S, KV, dh); pos: scalar int32 — the global
+    position of the current token (number of tokens already cached).
+
+    With ``ring=True`` the cache is a ring buffer of size S covering the
+    last S positions; validity masking accounts for wrap-around (slot order
+    does not matter because RoPE is applied before caching).
+    """
+    B, _, H, dh = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(B, 1, KV, G, dh)
+    s = _gqa_scores(qg, k_cache, scale)          # (B, KV, G, 1, S)
+    slot = jnp.arange(S)
+    if ring:
+        valid = slot < jnp.minimum(pos + 1, S)   # filled slots
+    else:
+        valid = slot <= pos
+        if window:
+            valid &= slot > pos - window
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p, v_cache).reshape(B, 1, H, dh)
+
+
+def cache_update(k_cache, v_cache, k_new, v_new, pos, *, ring: bool = False):
+    """Write k_new/v_new (B, 1, KV, dh) at position ``pos`` (ring: pos % S)."""
+    S = k_cache.shape[1]
+    idx = pos % S if ring else pos
+    k_cache = lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), idx, axis=1)
+    v_cache = lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), idx, axis=1)
+    return k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projection + rope + attend)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg) -> dict:
+    d, H, KV = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    dh = cfg.resolved_head_dim()
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": dense_init(ks[0], (d, H * dh)),
+        "wk": dense_init(ks[1], (d, KV * dh)),
+        "wv": dense_init(ks[2], (d, KV * dh)),
+        "wo": dense_init(ks[3], (H * dh, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * dh,), jnp.float32)
+        p["bk"] = jnp.zeros((KV * dh,), jnp.float32)
+        p["bv"] = jnp.zeros((KV * dh,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), jnp.float32)
+        p["k_norm"] = jnp.zeros((dh,), jnp.float32)
+    return p
+
+
+def _project_qkv(p, x, cfg, positions):
+    B, T, _ = x.shape
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    dh = cfg.resolved_head_dim()
+    q = jnp.einsum("btd,de->bte", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,de->bte", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,de->bte", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, T, H, dh)
+    k = k.reshape(B, T, KV, dh)
+    v = v.reshape(B, T, KV, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(p, x, cfg, *, window: int = 0, q_chunk: int = 128,
+                    positions=None, use_rope: bool = True):
+    """Self-attention over x (train/prefill, full span). Returns (out, (k, v))."""
+    B, T, _ = x.shape
+    if positions is None and use_rope:
+        positions = jnp.arange(T)[None, :]
+    q, k, v = _project_qkv(p, x, cfg, positions if use_rope else None)
+    out = full_attention(q, k, v, causal=True, window=window, q_chunk=q_chunk)
+    out = out.reshape(B, T, -1) @ p["wo"].astype(x.dtype)
+    return out, (k, v)
+
+
+def attention_decode_block(p, x, cfg, k_cache, v_cache, pos, *,
+                           window: int = 0, ring: bool = False,
+                           use_rope: bool = True):
+    """Single-token self-attention step. x: (B, 1, d). Returns (out, caches)."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos) if use_rope else None
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    k_cache, v_cache = cache_update(k_cache, v_cache, k, v, pos, ring=ring)
+    out = decode_attention(q, k_cache, v_cache, pos, window=window, ring=ring)
+    out = out.reshape(B, 1, -1) @ p["wo"].astype(x.dtype)
+    return out, (k_cache, v_cache)
+
+
+def init_cross_attention(key, cfg) -> dict:
+    """Cross-attention: queries from decoder (d_model), keys from encoder."""
+    return init_attention(key, cfg)
+
+
+def cross_attention_block(p, x, enc_k, enc_v, cfg):
+    """x: (B, Tq, d); enc_k/enc_v: (B, Tk, KV, dh) precomputed. No mask."""
+    B, T, _ = x.shape
+    H = cfg.num_heads
+    dh = cfg.resolved_head_dim()
+    q = jnp.einsum("btd,de->bte", x, p["wq"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+    q = q.reshape(B, T, H, dh)
+    out = full_attention(q, enc_k, enc_v, causal=False)
+    return out.reshape(B, T, H * dh) @ p["wo"].astype(x.dtype)
+
+
+def cross_kv(p, enc_out, cfg):
+    """Precompute cross-attention K/V from encoder output."""
+    B, Tk, _ = enc_out.shape
+    KV = cfg.num_kv_heads
+    dh = cfg.resolved_head_dim()
+    k = jnp.einsum("btd,de->bte", enc_out, p["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("btd,de->bte", enc_out, p["wv"].astype(enc_out.dtype))
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(enc_out.dtype)
+        v = v + p["bv"].astype(enc_out.dtype)
+    return k.reshape(B, Tk, KV, dh), v.reshape(B, Tk, KV, dh)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, ff: int, kind: str) -> dict:
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {"wi0": dense_init(ks[0], (d, ff)),
+                "wi1": dense_init(ks[1], (d, ff)),
+                "wo": dense_init(ks[2], (ff, d))}
+    return {"wi0": dense_init(ks[0], (d, ff)),
+            "wo": dense_init(ks[2], (ff, d))}
+
+
+def mlp_block(p, x, kind: str):
+    w0 = p["wi0"].astype(x.dtype)
+    wo = p["wo"].astype(x.dtype)
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ w0) * (x @ p["wi1"].astype(x.dtype))
+    elif kind == "geglu":
+        h = jax.nn.gelu(x @ w0) * (x @ p["wi1"].astype(x.dtype))
+    else:  # gelu
+        h = jax.nn.gelu(x @ w0)
+    return h @ wo

@@ -1,0 +1,68 @@
+"""Loss functions. The LM cross-entropy is sequence-chunked so the
+(B, S, V) logits tensor is never materialized at full length — critical for
+vocab sizes up to 256k at 1M-token global batches (train_4k).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _chunk_ce(x, head_w, head_b, targets, mask):
+    """x: (B, C, d) hidden; returns (sum_loss, sum_count, sum_correct)."""
+    logits = jnp.einsum("bcd,dv->bcv", x, head_w.astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    if head_b is not None:
+        logits = logits + head_b.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)                    # (B, C)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    ce = (logz - tgt) * mask
+    correct = (jnp.argmax(logits, axis=-1) == targets) * mask
+    return ce.sum(), mask.sum(), correct.sum()
+
+
+def chunked_lm_loss(x, head_w, head_b, targets, mask,
+                    chunk: int = 512) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, S, d); head_w: (d, V); targets/mask: (B, S).
+
+    Scans over sequence chunks; each chunk's logits are transient (and
+    vocab-sharded on the mesh), so peak memory is O(B * chunk * V / chips).
+    """
+    B, S, d = x.shape
+    mask = mask.astype(jnp.float32)
+    if S <= chunk:
+        tot, cnt, cor = _chunk_ce(x, head_w, head_b, targets, mask)
+    else:
+        if S % chunk:
+            # fall back to the largest divisor chunk
+            while S % chunk:
+                chunk -= 1
+        nc = S // chunk
+        xs = (x.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3),
+              targets.reshape(B, nc, chunk).transpose(1, 0, 2),
+              mask.reshape(B, nc, chunk).transpose(1, 0, 2))
+
+        def body(carry, inp):
+            xc, tc, mc = inp
+            t, c, r = _chunk_ce(xc, head_w, head_b, tc, mc)
+            tot, cnt, cor = carry
+            return (tot + t, cnt + c, cor + r), None
+
+        (tot, cnt, cor), _ = lax.scan(
+            body, (jnp.zeros(()), jnp.zeros(()), jnp.zeros(())), xs)
+    denom = jnp.maximum(cnt, 1.0)
+    loss = tot / denom
+    return loss, {"ce_loss": loss, "accuracy": cor / denom, "tokens": cnt}
+
+
+def classifier_loss(logits, labels) -> Tuple[jnp.ndarray, dict]:
+    """Plain CE over one-hot labels (the paper's Eq. 13)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(logz - tgt)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    return loss, {"ce_loss": loss, "accuracy": acc}

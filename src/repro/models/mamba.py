@@ -1,0 +1,179 @@
+"""Mamba2 (SSD) mixer — chunked-scan formulation.
+
+TPU adaptation: instead of a per-token recurrence (bandwidth-bound, no MXU
+use), the sequence is split into chunks of Q tokens. Within a chunk the SSD
+is an attention-like masked matmul (MXU); across chunks a short
+``lax.scan`` carries the (H, P, N) state. This is the standard
+"state-space duality" form, with memory O(B * H * Q * Q) per chunk block —
+heads shard over the 'model' mesh axis (112 heads % 16 == 0 for zamba2-7b).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init
+from repro.sharding import constrain
+
+NGROUPS = 1  # shared B/C across heads (zamba2 setting)
+
+
+def dims(cfg):
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    n_heads = d_inner // ssm.head_dim
+    conv_dim = d_inner + 2 * NGROUPS * ssm.state_dim
+    d_in_proj = 2 * d_inner + 2 * NGROUPS * ssm.state_dim + n_heads
+    return d_inner, n_heads, conv_dim, d_in_proj
+
+
+def init_layer(key, cfg) -> dict:
+    ssm = cfg.ssm
+    d = cfg.d_model
+    d_inner, n_heads, conv_dim, d_in_proj = dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": {"scale": jnp.zeros((d,), jnp.float32)},
+        "in_proj": dense_init(ks[0], (d, d_in_proj)),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (conv_dim, ssm.conv_width)),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "gn_scale": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[2], (d_inner, d)),
+    }
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv. x: (B,T,C); w: (C,W). Returns (y, new_state).
+
+    conv_state: (B, W-1, C) trailing inputs from the previous segment."""
+    B, T, C = x.shape
+    W = w.shape[1]
+    if conv_state is None:
+        conv_state = jnp.zeros((B, W - 1, C), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)         # (B, T+W-1, C)
+    y = jnp.zeros((B, T, C), x.dtype)
+    for i in range(W):
+        y = y + xp[:, i:i + T, :] * w[:, i].astype(x.dtype)
+    y = y + b.astype(x.dtype)
+    new_state = xp[:, -(W - 1):, :] if W > 1 else conv_state
+    return jax.nn.silu(y), new_state
+
+
+def _split_proj(zxbcdt, cfg):
+    ssm = cfg.ssm
+    d_inner, n_heads, conv_dim, _ = dims(cfg)
+    N = ssm.state_dim
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:d_inner + conv_dim]
+    dt = zxbcdt[..., d_inner + conv_dim:]
+    return z, xBC, dt
+
+
+def _split_xbc(xBC, cfg):
+    ssm = cfg.ssm
+    d_inner, n_heads, _, _ = dims(cfg)
+    N = ssm.state_dim
+    x = xBC[..., :d_inner]
+    Bm = xBC[..., d_inner:d_inner + N]
+    Cm = xBC[..., d_inner + N:]
+    return x, Bm, Cm
+
+
+def ssd_chunked(x, a_log_t, Bm, Cm, dt, ssm, state=None):
+    """Chunked SSD scan.
+
+    x: (B,T,H,P); a_log_t: (B,T,H) per-token log-decay (negative);
+    Bm, Cm: (B,T,N); dt: (B,T,H); state: (B,H,P,N) carry or None.
+    Returns (y: (B,T,H,P), final_state).
+    """
+    B, T, H, Pd = x.shape
+    N = Bm.shape[-1]
+    Q = min(ssm.chunk, T)
+    if T % Q:
+        raise ValueError(f"T={T} not divisible by chunk={Q}")
+    nc = T // Q
+    if state is None:
+        state = jnp.zeros((B, H, Pd, N), jnp.float32)
+
+    xc = x.reshape(B, nc, Q, H, Pd)
+    ac = a_log_t.reshape(B, nc, Q, H).astype(jnp.float32)
+    Bc = Bm.reshape(B, nc, Q, N)
+    Cc = Cm.reshape(B, nc, Q, N)
+    dtc = dt.reshape(B, nc, Q, H)
+
+    La = jnp.cumsum(ac, axis=2)                           # (B,nc,Q,H)
+    # intra-chunk: scores[q,s] = exp(La[q]-La[s]) * (C_q . B_s) * dt_s, s<=q
+    G = jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc,
+                   preferred_element_type=jnp.float32)    # (B,nc,Q,Q)
+    decay = La[:, :, :, None, :] - La[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(causal[None, None, :, :, None], decay, -jnp.inf)
+    M = jnp.exp(decay)
+    scores = G[..., None] * M * dtc[:, :, None, :, :]     # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", scores,
+                         xc.astype(jnp.float32))
+
+    # chunk states: sum_s exp(La[end]-La[s]) dt_s (x_s B_s^T)
+    dte = jnp.exp(La[:, :, -1:, :] - La) * dtc            # (B,nc,Q,H)
+    cstate = jnp.einsum("bcqh,bcqhp,bcqn->bchpn",
+                        dte, xc.astype(jnp.float32), Bc)  # (B,nc,H,P,N)
+    a_chunk = jnp.exp(La[:, :, -1, :])                    # (B,nc,H)
+
+    def body(s, inp):
+        cs, ak, Ck, Lk = inp
+        # inter-chunk contribution reads the *incoming* state
+        y_in = jnp.einsum("bqn,bqh,bhpn->bqhp", Ck, jnp.exp(Lk), s)
+        s = ak[..., None, None] * s + cs
+        return s, y_in
+
+    seq = (cstate.transpose(1, 0, 2, 3, 4), a_chunk.transpose(1, 0, 2),
+           Cc.transpose(1, 0, 2, 3), La.transpose(1, 0, 2, 3))
+    state, y_inter = lax.scan(body, state, seq)
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4)            # (B,nc,Q,H,P)
+    y = (y_intra + y_inter).reshape(B, T, H, Pd)
+    return y, state
+
+
+def mixer_apply(lp, x, cfg, cache=None):
+    """x: (B,T,d). cache: None or {'state': (B,H,P,N), 'conv': (B,W-1,C)}.
+    Returns (out, new_cache)."""
+    ssm = cfg.ssm
+    B, T, d = x.shape
+    d_inner, n_heads, conv_dim, _ = dims(cfg)
+    Pd = ssm.head_dim
+    zxbcdt = x @ lp["in_proj"].astype(x.dtype)
+    z, xBC, dt = _split_proj(zxbcdt, cfg)
+    conv_state = cache["conv"] if cache is not None else None
+    xBC, conv_state = _causal_conv(xBC, lp["conv_w"], lp["conv_b"],
+                                   conv_state)
+    xs, Bm, Cm = _split_xbc(xBC, cfg)
+    xs = xs.reshape(B, T, n_heads, Pd)
+    xs = constrain(xs, "batch", "seq", "heads", None)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])  # (B,T,H)
+    a_log_t = -dt * jnp.exp(lp["a_log"])                  # (B,T,H), negative
+    state = cache["state"] if cache is not None else None
+    y, state = ssd_chunked(xs, a_log_t, Bm, Cm, dt, ssm, state)
+    y = y + lp["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, T, d_inner)
+    # gated RMSNorm
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * lax.rsqrt(var + 1e-6) * lp["gn_scale"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ lp["out_proj"].astype(x.dtype)
+    return out, {"state": state, "conv": conv_state}
+
+
+def init_cache_layer(cfg, batch: int, dtype=jnp.float32) -> dict:
+    ssm = cfg.ssm
+    d_inner, n_heads, conv_dim, _ = dims(cfg)
+    return {
+        "state": jnp.zeros((batch, n_heads, ssm.head_dim, ssm.state_dim),
+                           jnp.float32),
+        "conv": jnp.zeros((batch, ssm.conv_width - 1, conv_dim), dtype),
+    }

@@ -1,0 +1,124 @@
+"""Mixture-of-Experts block with capacity-based, gather/scatter dispatch.
+
+Design notes (TPU adaptation):
+* Dispatch is index-based (argsorted slots via cumsum-of-one-hot), NOT the
+  dense one-hot einsum — so HLO FLOPs reflect only *active* expert compute
+  (honest roofline: MODEL_FLOPS uses 6·N_active·D).
+* Expert weights are laid out (E, d, ff); sharding is policy-dependent
+  (repro/sharding.py): "2d" = ff tensor-parallel over 'model' (experts
+  replicated — E ∈ {8, 32} ∤ 16), "fsdp" = d sharded over all axes,
+  "ep" = experts over 'pod' (documented negative result, EXPERIMENTS
+  §Perf iteration 7). Tokens stay batch-sharded; dispatch is a *vmapped*
+  per-row scatter/gather so the batch dim partitions without cross-chip
+  traffic (§Perf iteration 3).
+* Overflowed tokens (beyond capacity) are dropped — slot C is a dump slot.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init
+from repro.sharding import constrain
+
+
+def init_moe(key, d: int, ff: int, moe_cfg) -> dict:
+    E = moe_cfg.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, E), scale=0.02),
+        "wi0": dense_init(ks[1], (E, d, ff)),
+        "wi1": dense_init(ks[2], (E, d, ff)),
+        "wo": dense_init(ks[3], (E, ff, d)),
+    }
+
+
+def capacity(seq: int, moe_cfg) -> int:
+    E, k, cf = moe_cfg.num_experts, moe_cfg.top_k, moe_cfg.capacity_factor
+    return max(1, min(seq, int(math.ceil(seq * k / E * cf))))
+
+
+def moe_block(p, x, moe_cfg, mlp_kind: str = "swiglu"
+              ) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, S, d) -> (y: (B, S, d), aux: losses + load stats).
+
+    Routing groups are batch rows: capacity is per (row, expert).
+    """
+    B, S, d = x.shape
+    E, K = moe_cfg.num_experts, moe_cfg.top_k
+    C = capacity(S, moe_cfg)
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # (B, S, E)
+    top_w, top_i = lax.top_k(probs, K)                       # (B, S, K)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # --- slot assignment: position of each (token, k) in its expert queue.
+    flat_e = top_i.reshape(B, S * K)                         # expert ids
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)      # (B, S*K, E)
+    pos_all = jnp.cumsum(onehot, axis=1) - 1                 # (B, S*K, E)
+    pos = jnp.take_along_axis(pos_all, flat_e[..., None], axis=-1)[..., 0]
+    keep = pos < C                                           # (B, S*K)
+    slot = jnp.where(keep, pos, C)                           # dump slot = C
+
+    # --- scatter tokens into (B, E, C+1, d)
+    # Dispatch is local to each batch row, so every tensor here is pinned
+    # batch-sharded: without the constraints GSPMD bounces the expert
+    # buffers between batch- and feature-sharded layouts around the
+    # scatter/gather, paying full-tensor all-reduces per layer (§Perf
+    # iteration 3 in EXPERIMENTS.md).
+    xr = jnp.repeat(x, K, axis=1)                            # (B, S*K, d)
+    xr = constrain(xr, "batch", None, None)
+
+    def scatter_row(xr_row, e_row, s_row):
+        z = jnp.zeros((E, C + 1, d), x.dtype)
+        return z.at[e_row, s_row].set(xr_row, mode="drop")
+
+    # vmapped per-row scatter -> the batch dim is a scatter *batching*
+    # dim, which GSPMD partitions without cross-chip traffic
+    buf = jax.vmap(scatter_row)(xr, flat_e, slot)
+    buf = buf[:, :, :C, :]                                   # (B, E, C, d)
+    buf = constrain(buf, "batch", "expert", None, None)
+
+    # --- expert FFN (tensor-parallel over ff via weight sharding)
+    w0 = p["wi0"].astype(x.dtype)
+    wo = p["wo"].astype(x.dtype)
+    h = jnp.einsum("becd,edf->becf", buf, w0)
+    if mlp_kind == "swiglu":
+        h = jax.nn.silu(h) * jnp.einsum("becd,edf->becf", buf,
+                                        p["wi1"].astype(x.dtype))
+    elif mlp_kind == "geglu":
+        h = jax.nn.gelu(h) * jnp.einsum("becd,edf->becf", buf,
+                                        p["wi1"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(h)
+    out = jnp.einsum("becf,efd->becd", h, wo)                # (B, E, C, d)
+    out = constrain(out, "batch", "expert", None, None)
+
+    # --- gather back and combine with router weights
+    gslot = jnp.minimum(slot, C - 1)
+    gathered = jax.vmap(lambda o, e, s: o[e, s])(out, flat_e, gslot)
+    gathered = constrain(gathered, "batch", None, None)       # (B, S*K, d)
+    w = (top_w.reshape(B, S * K) * keep.astype(jnp.float32))
+    y = (gathered.astype(jnp.float32) * w[..., None])
+    y = y.reshape(B, S, K, d).sum(axis=2).astype(x.dtype)
+
+    # --- aux losses (Switch-style load balance + router z-loss)
+    me = jnp.mean(probs, axis=(0, 1))                        # (E,)
+    ce = jnp.mean(
+        jax.nn.one_hot(top_i[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    lb_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    frac_dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    aux = {
+        "moe_lb_loss": moe_cfg.load_balance_loss * lb_loss,
+        "moe_z_loss": moe_cfg.router_z_loss * z_loss,
+        "moe_frac_dropped": frac_dropped,
+        "moe_expert_load": me,
+    }
+    return y, aux

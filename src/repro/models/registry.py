@@ -1,0 +1,202 @@
+"""Model registry: one uniform functional API over all assigned archs.
+
+  api = get_model("qwen3-8b")
+  params = api.init(rng)
+  loss, metrics = api.loss(params, batch)
+  logits, cache = api.prefill(params, batch)
+  cache0 = api.init_cache(batch_size, seq_len, long_context=...)
+  logits, cache = api.decode_step(params, cache, {"token": t, "pos": p})
+
+``input_specs(cfg, shape)`` produces ShapeDtypeStruct stand-ins for every
+model input of a given assigned input shape — used by the multi-pod
+dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig, ShapeConfig, get_config
+from repro.models import encdec as ED
+from repro.models import hybrid as HY
+from repro.models import rwkv as RK
+from repro.models import transformer as TF
+from repro.models.transformer import cache_geometry, effective_window
+
+
+@dataclasses.dataclass
+class ModelApi:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    loss: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode_step: Callable[..., Any]
+    init_cache: Callable[..., Any]
+
+
+def _transformer_api(cfg) -> ModelApi:
+    def init_cache(batch, seq_len, long_context=False, dtype=jnp.bfloat16):
+        cache_len, _ = cache_geometry(cfg, seq_len, long_context)
+        return TF.init_cache(cfg, batch, cache_len, dtype)
+
+    def decode_step(params, cache, batch, *, long_context=False,
+                    dtype=jnp.float32):
+        w = effective_window(cfg, 1 << 62, long_context)
+        cache_len = cache["k"].shape[2]
+        ring = bool(w) and cache_len <= w
+        return TF.decode_step(params, cache, batch, cfg, window=w, ring=ring,
+                              dtype=dtype)
+
+    return ModelApi(
+        cfg=cfg,
+        init=partial(TF.init_params, cfg=cfg),
+        loss=partial(TF.loss_fn, cfg=cfg),
+        prefill=partial(TF.prefill, cfg=cfg),
+        decode_step=decode_step,
+        init_cache=init_cache,
+    )
+
+
+def _rwkv_api(cfg) -> ModelApi:
+    def init_cache(batch, seq_len, long_context=False, dtype=jnp.float32):
+        del seq_len, long_context
+        return RK.init_cache(cfg, batch, dtype=dtype)
+
+    def decode_step(params, cache, batch, *, long_context=False,
+                    dtype=jnp.float32):
+        del long_context
+        return RK.decode_step(params, cache, batch, cfg, dtype=dtype)
+
+    return ModelApi(
+        cfg=cfg,
+        init=partial(RK.init_params, cfg=cfg),
+        loss=partial(RK.loss_fn, cfg=cfg),
+        prefill=partial(RK.prefill, cfg=cfg),
+        decode_step=decode_step,
+        init_cache=init_cache,
+    )
+
+
+def _hybrid_api(cfg) -> ModelApi:
+    def init_cache(batch, seq_len, long_context=False, dtype=jnp.bfloat16):
+        cache_len, _ = cache_geometry(cfg, seq_len, long_context)
+        return HY.init_cache(cfg, batch, cache_len, dtype)
+
+    def decode_step(params, cache, batch, *, long_context=False,
+                    dtype=jnp.float32):
+        w = effective_window(cfg, 1 << 62, long_context)
+        cache_len = cache["k"].shape[2]
+        ring = bool(w) and cache_len <= w
+        return HY.decode_step(params, cache, batch, cfg, window=w, ring=ring,
+                              dtype=dtype)
+
+    def loss(params, batch, *, dtype=jnp.float32, **kw):
+        return HY.loss_fn(params, batch, cfg, dtype=dtype,
+                          window=cfg.sliding_window, **kw)
+
+    return ModelApi(
+        cfg=cfg,
+        init=partial(HY.init_params, cfg=cfg),
+        loss=loss,
+        prefill=partial(HY.prefill, cfg=cfg),
+        decode_step=decode_step,
+        init_cache=init_cache,
+    )
+
+
+def _encdec_api(cfg) -> ModelApi:
+    def init_cache(batch, seq_len, long_context=False, dtype=jnp.bfloat16):
+        del long_context
+        source = min(cfg.encdec.max_source_frames, seq_len)
+        return ED.init_cache(cfg, batch, seq_len, source, dtype)
+
+    def decode_step(params, cache, batch, *, long_context=False,
+                    dtype=jnp.float32):
+        del long_context
+        return ED.decode_step(params, cache, batch, cfg, dtype=dtype)
+
+    return ModelApi(
+        cfg=cfg,
+        init=partial(ED.init_params, cfg=cfg),
+        loss=partial(ED.loss_fn, cfg=cfg),
+        prefill=partial(ED.prefill, cfg=cfg),
+        decode_step=decode_step,
+        init_cache=init_cache,
+    )
+
+
+def get_model(cfg_or_name) -> ModelApi:
+    cfg = (get_config(cfg_or_name) if isinstance(cfg_or_name, str)
+           else cfg_or_name)
+    if cfg.kind in ("dense", "moe", "vlm"):
+        return _transformer_api(cfg)
+    if cfg.kind == "ssm":
+        return _rwkv_api(cfg)
+    if cfg.kind == "hybrid":
+        return _hybrid_api(cfg)
+    if cfg.kind == "audio":
+        return _encdec_api(cfg)
+    raise ValueError(f"get_model does not handle kind={cfg.kind!r}; "
+                     "classifier models use repro.models.classifier")
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for one assigned input shape."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.mode in ("train", "prefill"):
+        if cfg.kind == "vlm":
+            P = cfg.vlm.num_patches
+            specs = {
+                "patches": sds((B, P, cfg.vlm.patch_embed_dim), dtype),
+                "tokens": sds((B, S - P), i32),
+            }
+            if shape.mode == "train":
+                specs["targets"] = sds((B, S - P), i32)
+                specs["loss_mask"] = sds((B, S - P), jnp.float32)
+            return specs
+        if cfg.kind == "audio":
+            F = min(cfg.encdec.max_source_frames, S)
+            specs = {
+                "frames": sds((B, F, cfg.d_model), dtype),
+                "tokens": sds((B, S), i32),
+            }
+            if shape.mode == "train":
+                specs["targets"] = sds((B, S), i32)
+                specs["loss_mask"] = sds((B, S), jnp.float32)
+            return specs
+        specs = {"tokens": sds((B, S), i32)}
+        if shape.mode == "train":
+            specs["targets"] = sds((B, S), i32)
+            specs["loss_mask"] = sds((B, S), jnp.float32)
+        return specs
+    # decode: one new token against a seq_len cache
+    return {"token": sds((B, 1), i32), "pos": sds((), i32)}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig) -> Any:
+    """Abstract cache pytree for decode shapes (eval_shape: no allocation)."""
+    api = get_model(cfg)
+    long_context = shape.name == "long_500k"
+    return jax.eval_shape(
+        lambda: api.init_cache(shape.global_batch, shape.seq_len,
+                               long_context=long_context))
+
+
+def supports_shape(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    if shape.name == "long_500k" and cfg.long_context_mode == "skip":
+        return False
+    if cfg.kind == "classifier":
+        return False
+    return True

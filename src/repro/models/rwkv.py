@@ -1,0 +1,257 @@
+"""RWKV6 ("Finch") — attention-free token mixer with data-dependent decay.
+
+TPU adaptation: all per-token projections (r/k/v/g, the decay LoRA and the
+token-shift LoRA) are computed for the whole sequence with batched matmuls
+(MXU-friendly); only the WKV state recurrence runs under ``lax.scan``
+(compact HLO: one loop regardless of T). Decode reuses the same step with a
+persistent (state, shift) cache — O(1) memory in sequence length, which is
+why rwkv6 runs long_500k natively.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init, layer_norm
+from repro.models.losses import chunked_lm_loss
+from repro.sharding import constrain
+
+_MIX = 5  # r, k, v, w, g
+
+
+def init_tmix(key, d: int, rw) -> dict:
+    r_mix, r_dec = rw.lora_rank_mix, rw.lora_rank_decay
+    ks = jax.random.split(key, 12)
+    return {
+        "mu_x": jnp.zeros((d,), jnp.float32),
+        "mu": jnp.zeros((_MIX, d), jnp.float32),
+        "w1": dense_init(ks[0], (d, _MIX * r_mix), scale=0.01),
+        "w2": dense_init(ks[1], (_MIX, r_mix, d), scale=0.01),
+        "decay_base": jnp.full((d,), -6.0, jnp.float32),
+        "decay_a": dense_init(ks[2], (d, r_dec), scale=0.01),
+        "decay_b": dense_init(ks[3], (r_dec, d), scale=0.01),
+        "receptance": dense_init(ks[4], (d, d)),
+        "key": dense_init(ks[5], (d, d)),
+        "value_ff": dense_init(ks[6], (d, d)),
+        "gate": dense_init(ks[7], (d, d)),
+        "wo": dense_init(ks[8], (d, d)),
+        "bonus": jnp.zeros((d,), jnp.float32),
+        "gn_scale": jnp.ones((d,), jnp.float32),
+        "gn_bias": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def init_cmix(key, d: int, ff: int) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.zeros((d,), jnp.float32),
+        "mu_r": jnp.zeros((d,), jnp.float32),
+        "key": dense_init(ks[0], (d, ff)),
+        "value_out": dense_init(ks[1], (ff, d)),
+        "receptance": dense_init(ks[2], (d, d)),
+    }
+
+
+def init_layer(key, cfg) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    return {
+        "ln1": {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)},
+        "tmix": init_tmix(ks[0], d, cfg.rwkv),
+        "ln2": {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)},
+        "cmix": init_cmix(ks[1], d, cfg.d_ff),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Token-shift helpers
+# ---------------------------------------------------------------------------
+
+
+def _shift(x, x_prev):
+    """x: (B,T,d); x_prev: (B,d) last token of the previous segment."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _tmix_projections(p, x, x_prev, n_heads: int, head_dim: int):
+    """Vectorized r/k/v/w/g + decay for a whole segment."""
+    B, T, d = x.shape
+    xx = _shift(x, x_prev) - x
+    xxx = x + xx * p["mu_x"].astype(x.dtype)
+    m = jnp.tanh(xxx @ p["w1"].astype(x.dtype))          # (B,T,5r)
+    m = m.reshape(B, T, _MIX, -1)
+    m = jnp.einsum("btmr,mrd->btmd", m, p["w2"].astype(x.dtype))
+    cs = p["mu"].astype(x.dtype)[None, None] + m          # (B,T,5,d)
+    xs = x[:, :, None, :] + xx[:, :, None, :] * cs        # (B,T,5,d)
+    xr, xk, xv, xw, xg = [xs[:, :, i, :] for i in range(_MIX)]
+    r = xr @ p["receptance"].astype(x.dtype)
+    k = xk @ p["key"].astype(x.dtype)
+    v = xv @ p["value_ff"].astype(x.dtype)
+    g = jax.nn.silu(xg @ p["gate"].astype(x.dtype))
+    dec = p["decay_base"].astype(jnp.float32) + (
+        jnp.tanh(xw @ p["decay_a"].astype(x.dtype)).astype(jnp.float32)
+        @ p["decay_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(dec))                            # (B,T,d) in (0,1)
+    hd = head_dim
+    shp = (B, T, n_heads, hd)
+    return (r.reshape(shp), k.reshape(shp), v.reshape(shp),
+            w.astype(jnp.float32).reshape(shp), g)
+
+
+def _wkv_step(state, r, k, v, w, u):
+    """One WKV step. state: (B,H,N,N) f32 [key-dim, value-dim]."""
+    kv = k[..., :, None] * v[..., None, :]                # (B,H,N,N)
+    y = jnp.einsum("bhn,bhnm->bhm", r, state + u[..., :, None] * kv)
+    state = w[..., :, None] * state + kv
+    return state, y
+
+
+def tmix_apply(p, x, state, x_prev, n_heads: int, head_dim: int):
+    """Time-mix over a segment. Returns (out, new_state, new_x_prev)."""
+    B, T, d = x.shape
+    r, k, v, w, g = _tmix_projections(p, x, x_prev, n_heads, head_dim)
+    u = p["bonus"].astype(jnp.float32).reshape(n_heads, head_dim)
+
+    def body(s, inp):
+        rt, kt, vt, wt = inp
+        s, y = _wkv_step(s, rt.astype(jnp.float32), kt.astype(jnp.float32),
+                         vt.astype(jnp.float32), wt, u)
+        return s, y
+
+    seq = (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+           v.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3))
+    state, ys = lax.scan(body, state, seq)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, T, d)         # (B,T,d) f32
+    # per-head group norm
+    yh = y.reshape(B, T, n_heads, head_dim)
+    mu = yh.mean(-1, keepdims=True)
+    var = jnp.var(yh, axis=-1, keepdims=True)
+    yh = (yh - mu) * lax.rsqrt(var + 64e-5)
+    y = yh.reshape(B, T, d) * p["gn_scale"] + p["gn_bias"]
+    y = y.astype(x.dtype) * g
+    return y @ p["wo"].astype(x.dtype), state, x[:, -1, :]
+
+
+def cmix_apply(p, x, x_prev):
+    xx = _shift(x, x_prev) - x
+    xk = x + xx * p["mu_k"].astype(x.dtype)
+    xr = x + xx * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["key"].astype(x.dtype)))
+    k = constrain(k, "batch", "seq", "ff")
+    kv = k @ p["value_out"].astype(x.dtype)
+    return jax.nn.sigmoid(xr @ p["receptance"].astype(x.dtype)) * kv, x[:, -1, :]
+
+
+def layer_apply(lp, x, state, xp_att, xp_ffn, cfg):
+    H = cfg.d_model // cfg.rwkv.head_dim
+    h = layer_norm(x, lp["ln1"]["scale"], lp["ln1"]["bias"])
+    a, state, xp_att = tmix_apply(lp["tmix"], h, state, xp_att, H,
+                                  cfg.rwkv.head_dim)
+    x = x + a
+    h = layer_norm(x, lp["ln2"]["scale"], lp["ln2"]["bias"])
+    f, xp_ffn = cmix_apply(lp["cmix"], h, xp_ffn)
+    return x + f, state, xp_att, xp_ffn
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg) -> dict:
+    ks = jax.random.split(key, 4)
+    layer_keys = jax.random.split(ks[0], cfg.num_layers)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    d = cfg.d_model
+    return {
+        "embed": 0.02 * jax.random.normal(ks[1], (cfg.vocab_size, d)),
+        "ln_in": {"scale": jnp.ones((d,), jnp.float32),
+                  "bias": jnp.zeros((d,), jnp.float32)},
+        "layers": stacked,
+        "final_norm": {"scale": jnp.ones((d,), jnp.float32),
+                       "bias": jnp.zeros((d,), jnp.float32)},
+        "lm_head": {
+            "w": dense_init(ks[2], (d, cfg.vocab_size)),
+            **({"b": jnp.zeros((cfg.vocab_size,), jnp.float32)}
+               if cfg.lm_head_bias else {}),
+        },
+    }
+
+
+def init_cache(cfg, batch: int, cache_len: int = 0, dtype=jnp.float32) -> dict:
+    """Recurrent cache — O(1) in sequence length (cache_len unused)."""
+    del cache_len
+    H = cfg.d_model // cfg.rwkv.head_dim
+    N = cfg.rwkv.head_dim
+    Lyr = cfg.num_layers
+    d = cfg.d_model
+    return {
+        "state": jnp.zeros((Lyr, batch, H, N, N), jnp.float32),
+        "xp_att": jnp.zeros((Lyr, batch, d), dtype),
+        "xp_ffn": jnp.zeros((Lyr, batch, d), dtype),
+    }
+
+
+def forward(params, tokens, cfg, cache=None, *, dtype=jnp.float32):
+    """Segment forward (handles both full sequences and single tokens).
+
+    Returns (hidden, new_cache)."""
+    B, T = tokens.shape
+    if cache is None:
+        cache = init_cache(cfg, B, dtype=dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    x = constrain(x, "batch", "seq", "embed")
+    x = layer_norm(x, params["ln_in"]["scale"], params["ln_in"]["bias"])
+
+    def body(x, xs):
+        lp, st, xa, xf = xs
+        y, st, xa, xf = layer_apply(lp, x, st, xa, xf, cfg)
+        return y.astype(x.dtype), (st, xa, xf)
+
+    # token-shift caches follow the compute dtype inside the scan; cast
+    # back to the cache's storage dtype on the way out so serve_step's
+    # donated cache keeps a stable type across steps
+    xa_dt, xf_dt = cache["xp_att"].dtype, cache["xp_ffn"].dtype
+    x, (st, xa, xf) = lax.scan(
+        jax.checkpoint(body), x,
+        (params["layers"], cache["state"],
+         cache["xp_att"].astype(dtype), cache["xp_ffn"].astype(dtype)))
+    x = layer_norm(x, params["final_norm"]["scale"],
+                   params["final_norm"]["bias"])
+    return x, {"state": st, "xp_att": xa.astype(xa_dt),
+               "xp_ffn": xf.astype(xf_dt)}
+
+
+def loss_fn(params, batch, cfg, *, dtype=jnp.float32, loss_chunk: int = 512):
+    x, _ = forward(params, batch["tokens"], cfg, dtype=dtype)
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(batch["targets"], jnp.float32)
+    loss, metrics = chunked_lm_loss(
+        x, params["lm_head"]["w"], params["lm_head"].get("b"),
+        batch["targets"], mask, chunk=loss_chunk)
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def prefill(params, batch, cfg, *, dtype=jnp.float32, cache_extra: int = 0):
+    del cache_extra  # recurrent cache is O(1) — no headroom needed
+    x, cache = forward(params, batch["tokens"], cfg, dtype=dtype)
+    logits = _head(params, x[:, -1:, :])
+    return logits, cache
+
+
+def decode_step(params, cache, batch, cfg, *, dtype=jnp.float32):
+    x, cache = forward(params, batch["token"], cfg, cache, dtype=dtype)
+    return _head(params, x), cache
+
+
+def _head(params, x):
+    logits = (x @ params["lm_head"]["w"].astype(x.dtype)).astype(jnp.float32)
+    b = params["lm_head"].get("b")
+    return logits + b if b is not None else logits

@@ -1,0 +1,262 @@
+"""Decoder-only transformer LM covering the dense, MoE and VLM assigned
+architectures. Layers are stacked along a leading axis and executed with
+``lax.scan`` + ``jax.checkpoint`` (compact HLO + bounded activation memory —
+both matter for the 512-way SPMD dry-run on this 1-core container).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models.losses import chunked_lm_loss
+from repro.sharding import constrain, constrain_attn_q
+
+
+# ---------------------------------------------------------------------------
+# Window / cache geometry
+# ---------------------------------------------------------------------------
+
+
+def effective_window(cfg, seq_len: int, long_context: bool) -> int:
+    if long_context:
+        if cfg.long_context_mode == "native":
+            return cfg.sliding_window            # e.g. mixtral SWA
+        if cfg.long_context_mode == "swa":
+            return cfg.long_context_window
+    return cfg.sliding_window
+
+
+def cache_geometry(cfg, seq_len: int, long_context: bool) -> Tuple[int, bool]:
+    """Returns (cache_len, ring). SWA decode uses a ring buffer of the
+    window size — the sub-quadratic adaptation for long_500k (DESIGN §6)."""
+    w = effective_window(cfg, seq_len, long_context)
+    if w and w < seq_len:
+        return w, True
+    return seq_len, False
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": L.init_norm(ks[0], cfg.d_model, cfg.norm),
+        "attn": L.init_attention(ks[1], cfg),
+        "ln2": L.init_norm(ks[2], cfg.d_model, cfg.norm),
+    }
+    if cfg.moe is not None:
+        p["moe"] = MOE.init_moe(ks[3], cfg.d_model, cfg.d_ff, cfg.moe)
+    else:
+        p["mlp"] = L.init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.mlp)
+    return p
+
+
+def init_params(key, cfg) -> dict:
+    ks = jax.random.split(key, 5)
+    layer_keys = jax.random.split(ks[0], cfg.num_layers)
+    stacked = jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys)
+    params = {
+        "embed": L.embed_init(ks[1], (cfg.vocab_size, cfg.d_model)),
+        "layers": stacked,
+        "final_norm": L.init_norm(ks[2], cfg.d_model, cfg.norm),
+    }
+    head = {}
+    if not cfg.tie_embeddings:
+        head["w"] = L.dense_init(ks[3], (cfg.d_model, cfg.vocab_size))
+    if cfg.lm_head_bias:
+        head["b"] = jnp.zeros((cfg.vocab_size,), jnp.float32)
+    if head:
+        params["lm_head"] = head
+    if cfg.vlm is not None:
+        params["projector"] = {
+            "w": L.dense_init(ks[4], (cfg.vlm.patch_embed_dim, cfg.d_model)),
+            "b": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+    return params
+
+
+def head_weights(params, cfg):
+    if cfg.tie_embeddings:
+        w = params["embed"].T
+    else:
+        w = params["lm_head"]["w"]
+    b = params.get("lm_head", {}).get("b") if cfg.lm_head_bias else None
+    return w, b
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, tokens, cfg, dtype):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    return constrain(x, "batch", "seq", "embed")
+
+
+def _layer_apply(lp, x, cfg, window, q_chunk):
+    h = L.apply_norm(x, lp["ln1"], cfg.norm)
+    positions = jnp.arange(x.shape[1])[None, :]
+    q, k, v = L._project_qkv(lp["attn"], h, cfg, positions)
+    q = constrain_attn_q(q)
+    a = L.full_attention(q, k, v, causal=True, window=window, q_chunk=q_chunk)
+    a = a.reshape(x.shape[0], x.shape[1], -1) @ lp["attn"]["wo"].astype(x.dtype)
+    x = x + a
+    h = L.apply_norm(x, lp["ln2"], cfg.norm)
+    if cfg.moe is not None:
+        m, aux = MOE.moe_block(lp["moe"], h, cfg.moe, cfg.mlp)
+    else:
+        m = L.mlp_block(lp["mlp"], constrain(h, "batch", "seq", "embed"),
+                        cfg.mlp)
+        aux = None
+    return x + m, aux
+
+
+def forward(params, tokens, cfg, *, extra_embeds=None, dtype=jnp.float32,
+            window: Optional[int] = None, q_chunk: int = 128,
+            collect_kv: bool = False):
+    """Full-span forward. Returns (hidden (B,S,d), aux, kv or None).
+
+    extra_embeds: (B, P, d_patch_or_frame) multimodal prefix (VLM), already
+    embedded by the (stub) frontend; projected and prepended to the tokens.
+    """
+    if window is None:
+        window = cfg.sliding_window
+    x = _embed(params, tokens, cfg, dtype)
+    if extra_embeds is not None:
+        proj = params["projector"]
+        pref = extra_embeds.astype(dtype) @ proj["w"].astype(dtype)
+        pref = pref + proj["b"].astype(dtype)
+        x = jnp.concatenate([pref, x], axis=1)
+        x = constrain(x, "batch", "seq", "embed")
+
+    def body(carry, lp):
+        y, aux = _layer_apply(lp, carry, cfg, window, q_chunk)
+        if collect_kv:
+            # recompute K/V for the cache (cheap relative to the block)
+            h = L.apply_norm(carry, lp["ln1"], cfg.norm)
+            positions = jnp.arange(carry.shape[1])[None, :]
+            _, k, v = L._project_qkv(lp["attn"], h, cfg, positions)
+            return y, (aux, (k, v))
+        return y, (aux, None)
+
+    x, (aux, kv) = lax.scan(jax.checkpoint(body), x, params["layers"])
+    x = L.apply_norm(x, params["final_norm"], cfg.norm)
+    return x, aux, kv
+
+
+def _aux_loss(aux) -> jnp.ndarray:
+    if aux is None:
+        return jnp.zeros(())
+    return jnp.sum(aux["moe_lb_loss"]) + jnp.sum(aux["moe_z_loss"])
+
+
+# ---------------------------------------------------------------------------
+# Train loss
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, batch, cfg, *, dtype=jnp.float32, q_chunk: int = 128,
+            loss_chunk: int = 512):
+    tokens = batch["tokens"]
+    targets = batch["targets"]
+    mask = batch.get("loss_mask")
+    extra = batch.get("patches") if cfg.vlm is not None else None
+    x, aux, _ = forward(params, tokens, cfg, extra_embeds=extra, dtype=dtype,
+                        q_chunk=q_chunk)
+    if extra is not None:
+        x = x[:, -tokens.shape[1]:, :]      # loss over text positions only
+    if mask is None:
+        mask = jnp.ones_like(targets, jnp.float32)
+    w, b = head_weights(params, cfg)
+    loss, metrics = chunked_lm_loss(x, w, b, targets, mask, chunk=loss_chunk)
+    loss = loss + _aux_loss(aux)
+    if aux is not None:
+        metrics = dict(metrics,
+                       moe_frac_dropped=jnp.mean(aux["moe_frac_dropped"]))
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16) -> dict:
+    KV = cfg.num_kv_heads
+    dh = cfg.resolved_head_dim()
+    Lyr = cfg.num_layers
+    return {
+        "k": jnp.zeros((Lyr, batch, cache_len, KV, dh), dtype),
+        "v": jnp.zeros((Lyr, batch, cache_len, KV, dh), dtype),
+    }
+
+
+def _pad_cache_seq(k, extra: int):
+    """Append `extra` empty slots along the cache sequence axis (axis 2 of
+    (L, B, S, KV, dh)) — decode_step writes NEW positions there; without
+    headroom dynamic_update_slice clamps to S-1 and corrupts the cache."""
+    if not extra:
+        return k
+    pad = [(0, 0)] * k.ndim
+    pad[2] = (0, extra)
+    return jnp.pad(k, pad)
+
+
+def prefill(params, batch, cfg, *, dtype=jnp.float32, q_chunk: int = 128,
+            cache_extra: int = 0):
+    """Forward over a prompt; returns (last-token logits, cache).
+
+    cache_extra: headroom slots for subsequent decode_step calls."""
+    tokens = batch["tokens"]
+    extra = batch.get("patches") if cfg.vlm is not None else None
+    x, _, kv = forward(params, tokens, cfg, extra_embeds=extra, dtype=dtype,
+                       q_chunk=q_chunk, collect_kv=True)
+    w, b = head_weights(params, cfg)
+    logits = x[:, -1:, :] @ w.astype(x.dtype)
+    logits = logits.astype(jnp.float32)
+    if b is not None:
+        logits = logits + b
+    cache = {"k": _pad_cache_seq(kv[0].astype(jnp.bfloat16), cache_extra),
+             "v": _pad_cache_seq(kv[1].astype(jnp.bfloat16), cache_extra)}
+    return logits, cache
+
+
+def decode_step(params, cache, batch, cfg, *, window: int = 0,
+                ring: bool = False, dtype=jnp.float32):
+    """One-token decode. batch: {'token': (B,1), 'pos': scalar int32}."""
+    token, pos = batch["token"], batch["pos"]
+    x = _embed(params, token, cfg, dtype)
+
+    def body(carry, xs):
+        lp, kc, vc = xs
+        h = L.apply_norm(carry, lp["ln1"], cfg.norm)
+        a, (kc, vc) = L.attention_decode_block(
+            lp["attn"], h, cfg, kc, vc, pos, window=window, ring=ring)
+        y = carry + a
+        h = L.apply_norm(y, lp["ln2"], cfg.norm)
+        if cfg.moe is not None:
+            m, _ = MOE.moe_block(lp["moe"], h, cfg.moe, cfg.mlp)
+        else:
+            m = L.mlp_block(lp["mlp"], h, cfg.mlp)
+        return y + m, (kc, vc)
+
+    x, (ks, vs) = lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.apply_norm(x, params["final_norm"], cfg.norm)
+    w, b = head_weights(params, cfg)
+    logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+    if b is not None:
+        logits = logits + b
+    return logits, {"k": ks, "v": vs}

@@ -1,0 +1,11 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adam,
+    apply_updates,
+    clip_by_global_norm,
+    sgd,
+    sgd_momentum,
+)
+
+__all__ = ["Optimizer", "adam", "apply_updates", "clip_by_global_norm",
+           "sgd", "sgd_momentum"]

@@ -1,0 +1,105 @@
+"""Pure-pytree optimizers (no optax in this environment).
+
+API mirrors the usual (init, update) pair:
+
+  opt = adam(1e-3)
+  state = opt.init(params)
+  updates, state = opt.update(grads, state, params)
+  params = tree_map(lambda p, u: p + u, params, updates)
+
+All optimizer state mirrors the parameter sharding (ZeRO-3 on the mesh) —
+the dry-run passes opt state through the same `param_pspecs` rules.
+The paper's experiments use SGD (FMNIST) and Adam (CIFAR10/Mini-ImageNet/
+THUC); App. A.9 analyzes both plus SGD-momentum — we provide all three.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., Tuple[Any, Any]]
+
+
+def _tree_zeros_like(params):
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None, lr_scale=1.0):
+        del params
+        upd = jax.tree_util.tree_map(lambda g: -lr * lr_scale * g, grads)
+        return upd, {"count": state["count"] + 1}
+
+    return Optimizer(init, update)
+
+
+def sgd_momentum(lr: float, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"m": _tree_zeros_like(params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None, lr_scale=1.0):
+        del params
+        m = jax.tree_util.tree_map(
+            lambda mm, g: momentum * mm + (1.0 - momentum) * g,
+            state["m"], grads)
+        upd = jax.tree_util.tree_map(lambda mm: -lr * lr_scale * mm, m)
+        return upd, {"m": m, "count": state["count"] + 1}
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"m": _tree_zeros_like(params),
+                "v": _tree_zeros_like(params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None, lr_scale=1.0):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        m = jax.tree_util.tree_map(
+            lambda mm, g: b1 * mm + (1 - b1) * g, state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g),
+            state["v"], grads)
+        bc1 = 1 - b1 ** c
+        bc2 = 1 - b2 ** c
+
+        def u(mm, vv, p):
+            step = mm / bc1 / (jnp.sqrt(vv / bc2) + eps)
+            if weight_decay and p is not None:
+                step = step + weight_decay * p
+            return -lr * lr_scale * step
+
+        if params is None:
+            upd = jax.tree_util.tree_map(lambda mm, vv: u(mm, vv, None), m, v)
+        else:
+            upd = jax.tree_util.tree_map(u, m, v, params)
+        return upd, {"m": m, "v": v, "count": count}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gn
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype),
+                                  params, updates)

@@ -1,0 +1,10 @@
+from repro.roofline.analysis import (
+    HW_V5E,
+    Hardware,
+    model_flops,
+    parse_collectives,
+    roofline_terms,
+)
+
+__all__ = ["HW_V5E", "Hardware", "model_flops", "parse_collectives",
+           "roofline_terms"]

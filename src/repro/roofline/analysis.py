@@ -1,0 +1,138 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms, in seconds, per chip (the SPMD module in
+``compiled.as_text()`` is the per-partition program, so HLO sizes/FLOPs
+from it are already per-chip):
+
+  compute    = HLO_FLOPs_per_chip / peak_FLOPs
+  memory     = HLO_bytes_per_chip / HBM_bw
+  collective = collective_bytes_per_chip / link_bw
+
+collective_bytes are NOT in cost_analysis: we parse the optimized HLO and
+sum the result-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute. all-reduce counts 2x
+(ring = reduce-scatter + all-gather). Shapes in the partitioned module are
+local, so the sum approximates per-chip wire traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+# TPU v5e (per chip)
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float          # bf16 FLOP/s
+    hbm_bw: float              # bytes/s
+    ici_bw: float              # bytes/s per link
+
+
+HW_V5E = Hardware("tpu-v5e", 197e12, 819e9, 50e9)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %all-gather.7 = bf16[16,2048,688]{2,1,0} all-gather(...)
+#        ROOT %tuple ... = (f32[...], ...) tuple(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nb = _DTYPE_BYTES.get(dtype)
+    if nb is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * nb
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes per collective kind from partitioned HLO."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    seen_done = set()
+    for m in _OP_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        b = _shape_bytes(dtype, dims)
+        out[kind] += b
+    # all-reduce moves ~2x its size on a ring
+    total = sum(v * (2.0 if k == "all-reduce" else 1.0)
+                for k, v in out.items())
+    out["total_weighted"] = total
+    return out
+
+
+def roofline_terms(flops_per_chip: float, bytes_per_chip: float,
+                   collective_bytes_per_chip: float,
+                   hw: Hardware = HW_V5E) -> Dict[str, float]:
+    t_c = flops_per_chip / hw.peak_flops
+    t_m = bytes_per_chip / hw.hbm_bw
+    t_x = collective_bytes_per_chip / hw.ici_bw
+    terms = {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x}
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = dom.replace("_s", "")
+    total = max(t_c, t_m, t_x)
+    terms["roofline_bound_s"] = total
+    terms["compute_fraction"] = t_c / total if total > 0 else 0.0
+    return terms
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE) — the "useful" FLOPs
+# ---------------------------------------------------------------------------
+
+
+def _active_params(cfg) -> float:
+    """Active parameter count per token (MoE counts top_k experts only)."""
+    d, ff, V, L = cfg.d_model, cfg.d_ff, cfg.vocab_size, cfg.num_layers
+    dh = cfg.resolved_head_dim()
+    n = V * d  # embedding
+    if not cfg.tie_embeddings:
+        n += d * V
+    if cfg.kind in ("dense", "moe", "vlm"):
+        attn = d * cfg.num_heads * dh + 2 * d * cfg.num_kv_heads * dh \
+            + cfg.num_heads * dh * d
+        gates = 3 if cfg.mlp in ("swiglu", "geglu") else 2
+        if cfg.moe is not None:
+            mlp = cfg.moe.top_k * gates * d * ff + d * cfg.moe.num_experts
+        else:
+            mlp = gates * d * ff
+        n += L * (attn + mlp)
+    elif cfg.kind == "ssm":     # rwkv6
+        n += L * (5 * d * d + 2 * d * ff + d * d)
+    elif cfg.kind == "hybrid":
+        from repro.models.mamba import dims as mdims
+        d_inner, n_heads, conv_dim, d_in_proj = mdims(cfg)
+        mamba = d * d_in_proj + d_inner * d
+        n += L * mamba
+        sites_attn = d * cfg.num_heads * dh * 2 + 2 * d * cfg.num_kv_heads * dh
+        n += 14 * (sites_attn + 3 * d * ff)   # shared-block applications
+    elif cfg.kind == "audio":
+        attn = 2 * (d * cfg.num_heads * dh * 2 + 2 * d * cfg.num_kv_heads * dh)
+        n += (L + cfg.encdec.encoder_layers) * (attn / 2 + 2 * d * ff)
+    return float(n)
+
+
+def model_flops(cfg, shape, mode: str) -> float:
+    """6·N_active·D for train; 2·N_active·D for inference-forward."""
+    n = _active_params(cfg)
+    if mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,24 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see
+# the single real CPU device; only repro.launch.dryrun forces 512.
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_dirichlet_cohort(rng, num_clients=30, num_classes=10,
+                          alphas=(0.01, 10.0), frac_balanced=0.2):
+    """Label distributions: (1-frac) imbalanced + frac balanced clients."""
+    n_bal = int(num_clients * frac_balanced)
+    n_imb = num_clients - n_bal
+    dists = np.concatenate([
+        np.stack([rng.dirichlet(np.full(num_classes, alphas[0]))
+                  for _ in range(n_imb)]),
+        np.stack([rng.dirichlet(np.full(num_classes, alphas[1]))
+                  for _ in range(n_bal)]),
+    ])
+    return dists, n_imb

@@ -1,0 +1,121 @@
+"""Agglomerative clustering + Eq. 9 distance (paper §3.3-3.4)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (agglomerate, cluster_means, distance_matrix,
+                        pairwise_arccos)
+
+
+def _blob_dist(rng, sizes, sep=10.0):
+    """Distance matrix of 1-D blobs with separation `sep`."""
+    pts = np.concatenate([rng.normal(i * sep, 0.1, s)
+                          for i, s in enumerate(sizes)])
+    return np.abs(pts[:, None] - pts[None, :]), pts
+
+
+@pytest.mark.parametrize("linkage", ["ward", "average", "complete",
+                                     "single"])
+def test_recovers_separated_blobs(rng, linkage):
+    d, pts = _blob_dist(rng, (5, 7, 4))
+    labels = agglomerate(d, 3, linkage=linkage)
+    assert len(np.unique(labels)) == 3
+    # items of one blob share one label
+    assert len(set(labels[:5])) == 1
+    assert len(set(labels[5:12])) == 1
+    assert len(set(labels[12:])) == 1
+
+
+def test_num_clusters_edges(rng):
+    d, _ = _blob_dist(rng, (3, 3))
+    assert len(np.unique(agglomerate(d, 1))) == 1
+    assert len(np.unique(agglomerate(d, 6))) == 6      # no merges
+    assert len(np.unique(agglomerate(d, 99))) == 6     # clipped at N
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(2, 25), st.integers(1, 8), st.integers(0, 2**31 - 1),
+       st.sampled_from(["ward", "average", "complete", "single"]))
+def test_label_invariants(n, m, seed, linkage):
+    """Any symmetric matrix: labels in [0, M'), M' = min(m, n), and the
+    relabelling is by first appearance (label 0 appears at index 0)."""
+    r = np.random.default_rng(seed)
+    a = r.uniform(0.1, 5.0, (n, n))
+    d = 0.5 * (a + a.T)
+    np.fill_diagonal(d, 0.0)
+    labels = agglomerate(d, m, linkage=linkage)
+    k = min(m, n)
+    assert labels.shape == (n,)
+    assert set(labels) == set(range(k))
+    assert labels[0] == 0
+
+
+def test_deterministic(rng):
+    a = rng.uniform(size=(12, 12))
+    d = 0.5 * (a + a.T)
+    l1 = agglomerate(d, 4)
+    l2 = agglomerate(d, 4)
+    np.testing.assert_array_equal(l1, l2)
+
+
+def test_cluster_means():
+    vals = np.array([1.0, 2.0, 3.0, 10.0])
+    labels = np.array([0, 0, 1, 1])
+    np.testing.assert_allclose(cluster_means(vals, labels, 2), [1.5, 6.5])
+
+
+# ---------------------------------------------------------------------------
+# Eq. 9 distance
+# ---------------------------------------------------------------------------
+
+
+def test_pairwise_arccos_properties(rng):
+    x = jnp.asarray(rng.normal(size=(9, 16)))
+    d = np.asarray(pairwise_arccos(x))
+    assert np.allclose(d, d.T, atol=1e-5)
+    assert np.allclose(np.diag(d), 0.0)
+    assert np.all(d >= 0) and np.all(d <= np.pi + 1e-6)
+    # identical direction -> 0; opposite -> pi
+    y = jnp.asarray(np.stack([np.ones(8), np.ones(8), -np.ones(8)]))
+    dy = np.asarray(pairwise_arccos(y))
+    assert dy[0, 1] < 1e-2
+    assert dy[0, 2] > np.pi - 1e-2
+
+
+def test_distance_matrix_lambda_term(rng):
+    """λ|ΔĤ| separates same-direction updates of different entropy."""
+    base = rng.normal(size=16)
+    x = jnp.asarray(np.stack([base * 100.0, base * 100.0, base * 0.001]))
+    d0 = np.asarray(distance_matrix(x, temperature=0.01, lam=0.0))
+    d10 = np.asarray(distance_matrix(x, temperature=0.01, lam=10.0))
+    # angle part identical (same direction): rows 0,1 stay close
+    assert d10[0, 1] == pytest.approx(d0[0, 1], abs=1e-4)
+    # row 2 has near-uniform softmax (tiny magnitudes) => different Ĥ
+    assert d10[0, 2] > d0[0, 2] + 1.0
+
+
+def test_hics_clusters_split_by_heterogeneity(rng):
+    """End-to-end §3.3 claim: with λ=10, balanced clients form their own
+    cluster even when directions are noisy."""
+    C = 10
+    imb = []
+    for i in range(8):
+        d = np.zeros(C)
+        d[i % C] = 1.0
+        imb.append(0.05 * (d - 0.1) + rng.normal(0, 1e-4, C))
+    bal = [rng.normal(0, 1e-4, C) for _ in range(4)]
+    x = jnp.asarray(np.stack(imb + bal))
+    dist = np.asarray(distance_matrix(x, temperature=0.0025, lam=10.0))
+    # at M=2 the dominant λ|ΔĤ| gap forces the balanced/imbalanced split
+    labels = agglomerate(dist, 2, linkage="ward")
+    assert len(set(labels[8:])) == 1
+    assert len(set(labels[:8])) == 1
+    assert labels[0] != labels[-1]
+    # and with λ=0 (plain Clustered Sampling) the split is NOT recovered:
+    # one-hot directions are mutually ~orthogonal, so the 2-partition mixes
+    dist0 = np.asarray(distance_matrix(x, temperature=0.0025, lam=0.0))
+    labels0 = agglomerate(dist0, 2, linkage="ward")
+    mixed = (len(set(labels0[8:])) > 1) or (len(set(labels0[:8])) > 1)
+    assert mixed, "without the entropy term CS should fail to separate"

@@ -1,0 +1,87 @@
+"""Two-stage annealed sampling (paper §3.4, Eq. 10)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (anneal, cluster_probs, hierarchical_sample,
+                        sampling_probabilities)
+
+
+def test_anneal_schedule():
+    assert anneal(4.0, 0, 100) == pytest.approx(4.0)
+    assert anneal(4.0, 50, 100) == pytest.approx(2.0)
+    assert anneal(4.0, 100, 100) == pytest.approx(0.0)
+    assert anneal(4.0, 150, 100) == 0.0          # clipped
+
+
+@settings(deadline=None, max_examples=40)
+@given(st.integers(1, 12), st.floats(0.0, 8.0), st.integers(0, 2**31 - 1))
+def test_cluster_probs_simplex(m, gamma, seed):
+    r = np.random.default_rng(seed)
+    h = r.uniform(0, np.log(10), m)
+    p = cluster_probs(h, gamma)
+    assert p.shape == (m,)
+    assert np.all(p >= 0)
+    assert np.sum(p) == pytest.approx(1.0, abs=1e-9)
+
+
+def test_cluster_probs_monotone_in_entropy():
+    p = cluster_probs(np.array([0.5, 1.0, 2.0]), gamma_t=3.0)
+    assert p[0] < p[1] < p[2]
+    # gamma 0 -> uniform over clusters
+    p0 = cluster_probs(np.array([0.5, 1.0, 2.0]), gamma_t=0.0)
+    np.testing.assert_allclose(p0, 1 / 3, atol=1e-9)
+
+
+def test_hierarchical_sample_distinct(rng):
+    labels = np.array([0] * 10 + [1] * 10 + [2] * 10)
+    means = np.array([0.1, 1.0, 2.2])
+    w = np.ones(30)
+    for k in (1, 5, 15, 30):
+        ids = hierarchical_sample(rng, labels, means, w, k, gamma_t=2.0)
+        assert len(ids) == k
+        assert len(set(ids)) == k
+        assert all(0 <= i < 30 for i in ids)
+
+
+def test_hierarchical_sample_prefers_high_entropy_cluster(rng):
+    labels = np.array([0] * 20 + [1] * 5)
+    means = np.array([0.1, 2.2])       # cluster 1 = balanced clients
+    w = np.ones(25)
+    hits = 0
+    for _ in range(300):
+        ids = hierarchical_sample(rng, labels, means, w, 1, gamma_t=4.0)
+        hits += ids[0] >= 20
+    assert hits > 270      # π_1 ≈ e^{4·2.2}/(e^{4·0.1}+e^{4·2.2}) ≈ 1
+
+
+def test_within_cluster_weighting(rng):
+    """Stage 2: p̃_k ∝ p_k inside the chosen cluster."""
+    labels = np.zeros(3, dtype=int)
+    means = np.array([1.0])
+    w = np.array([1.0, 2.0, 7.0])
+    counts = np.zeros(3)
+    for _ in range(4000):
+        ids = hierarchical_sample(rng, labels, means, w, 1, gamma_t=1.0)
+        counts[ids[0]] += 1
+    freq = counts / counts.sum()
+    np.testing.assert_allclose(freq, w / w.sum(), atol=0.03)
+
+
+def test_sampling_probabilities_marginal(rng):
+    labels = np.array([0, 0, 1, 1, 1])
+    means = np.array([0.5, 2.0])
+    w = np.array([1.0, 3.0, 1.0, 1.0, 2.0])
+    p = sampling_probabilities(labels, means, w, gamma_t=2.0)
+    assert p.sum() == pytest.approx(1.0)
+    pi = cluster_probs(means, 2.0)
+    np.testing.assert_allclose(p[:2].sum(), pi[0], atol=1e-9)
+    # within cluster 0: 1:3 ratio
+    assert p[1] / p[0] == pytest.approx(3.0)
+    # empirical single-draw frequencies match the marginal
+    counts = np.zeros(5)
+    for _ in range(6000):
+        ids = hierarchical_sample(rng, labels, means, w, 1, gamma_t=2.0)
+        counts[ids[0]] += 1
+    np.testing.assert_allclose(counts / counts.sum(), p, atol=0.03)

@@ -1,0 +1,106 @@
+"""Cache correctness: for every architecture, decoding tokens one at a
+time against the cache must produce the same logits as a fresh prefill
+of the extended sequence (teacher forcing)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import get_model
+
+ASSIGNED = [a for a in list_archs() if not a.startswith("paper-")]
+EXTRA = 3
+
+
+def _prefill_batch(cfg, rng, B, S):
+    if cfg.kind == "vlm":
+        P = cfg.vlm.num_patches
+        return {"patches": jnp.asarray(
+                    rng.normal(size=(B, P, cfg.vlm.patch_embed_dim)),
+                    jnp.float32),
+                "tokens": jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, (B, S - P)),
+                    jnp.int32)}
+    if cfg.kind == "audio":
+        F = min(cfg.encdec.max_source_frames, S)
+        return {"frames": jnp.asarray(
+                    rng.normal(size=(B, F, cfg.d_model)), jnp.float32),
+                "tokens": jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+    return {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+
+
+def _extend(batch, cfg, new_tokens):
+    out = dict(batch)
+    out["tokens"] = jnp.concatenate([batch["tokens"], new_tokens], axis=1)
+    return out
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_decode_matches_prefill(arch, rng):
+    cfg = get_config(arch).reduced()
+    if cfg.moe is not None:
+        pytest.skip("MoE capacity dropping differs between a full-span "
+                    "prefill (C slots per S tokens) and token-by-token "
+                    "decode (C per token) by design — train/serve routing "
+                    "is not bit-identical in capacity-based MoE")
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    B, S = 2, 24
+    batch = _prefill_batch(cfg, rng, B, S)
+    new_toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, EXTRA)),
+                           jnp.int32)
+
+    # path A: prefill S, then decode EXTRA tokens through the cache.
+    # prefill caches are sized to the prefill span; decode needs room
+    # for EXTRA more -> build a fresh cache of the right length and
+    # replay the whole prefix through decode_step (also exercises the
+    # cache-update path position by position).
+    total = S + EXTRA
+    cache = api.init_cache(B, total, dtype=jnp.float32)
+    if cfg.kind == "vlm":
+        prefix = batch["tokens"]
+        offset = cfg.vlm.num_patches
+        pytest.skip("vlm decode replays only the text suffix; covered by "
+                    "the transformer archs below")
+    elif cfg.kind == "audio":
+        # enc-dec: cache carries cross-attn K/V from the encoder; use
+        # the api's prefill cache then decode (cache has headroom of
+        # seq_len = total)
+        cache = None
+        prefix = batch["tokens"]
+    else:
+        prefix = batch["tokens"]
+
+    if cfg.kind == "audio":
+        logits_a, cache = api.prefill(params, batch, dtype=jnp.float32,
+                                      cache_extra=EXTRA)
+        pos = prefix.shape[1]
+        last = None
+        for i in range(EXTRA):
+            last, cache = api.decode_step(
+                params, cache, {"token": new_toks[:, i:i + 1],
+                                "pos": jnp.asarray(pos + i, jnp.int32)},
+                dtype=jnp.float32)
+    else:
+        last = None
+        for i in range(prefix.shape[1] + EXTRA):
+            tok = (prefix[:, i:i + 1] if i < prefix.shape[1]
+                   else new_toks[:, i - prefix.shape[1]:
+                                 i - prefix.shape[1] + 1])
+            last, cache = api.decode_step(
+                params, cache, {"token": tok,
+                                "pos": jnp.asarray(i, jnp.int32)},
+                dtype=jnp.float32)
+
+    # path B: one prefill over the full extended sequence
+    full = _extend(batch, cfg, new_toks)
+    logits_b, _ = api.prefill(params, full, dtype=jnp.float32)
+
+    a = np.asarray(last[:, -1, :], np.float32)
+    b = np.asarray(logits_b[:, -1, :], np.float32)
+    # compare top-1 and logit values (loose: different compute orders)
+    np.testing.assert_allclose(a, b, atol=2e-2, rtol=2e-2)
+    assert (a.argmax(-1) == b.argmax(-1)).all()

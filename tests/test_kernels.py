@@ -1,0 +1,148 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (ref.py).
+
+All kernels run in interpret mode on CPU — the kernel bodies execute in
+Python with the exact BlockSpec tiling the TPU target will use.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.hetero_entropy import entropy_pallas
+from repro.kernels.pairwise import pairwise_distance_pallas
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+# ---------------------------------------------------------------------------
+# hetero_entropy
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("n,c", [(1, 4), (5, 10), (50, 1000), (17, 769),
+                                 (8, 4096), (3, 151_936 // 64)])
+def test_entropy_kernel_sweep(rng, n, c, dtype):
+    x = jnp.asarray(rng.normal(size=(n, c)) * 0.02, dtype)
+    got = entropy_pallas(x, 0.0025, interpret=True)
+    want = ref.entropy_ref(x, 0.0025)
+    tol = 5e-5 if dtype == jnp.float32 else 5e-3
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("block_c", [128, 512, 2048])
+def test_entropy_kernel_block_invariance(rng, block_c):
+    """Result must not depend on the VMEM block size."""
+    x = jnp.asarray(rng.normal(size=(9, 3000)), jnp.float32)
+    got = entropy_pallas(x, 0.01, block_c=block_c, interpret=True)
+    want = ref.entropy_ref(x, 0.01)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4)
+
+
+def test_entropy_kernel_extreme_magnitudes(rng):
+    """Online softmax must survive values that overflow a naive exp."""
+    x = jnp.asarray(rng.normal(size=(4, 600)) * 500.0, jnp.float32)
+    got = entropy_pallas(x, 0.0025, interpret=True)
+    want = ref.entropy_ref(x, 0.0025)
+    assert np.all(np.isfinite(np.asarray(got)))
+    # at |u| ~ 2e5 f32 eps is ~0.016, so (u - m) carries O(eps·|u|)
+    # rounding in ref and kernel alike; allow that inherent slack
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# pairwise (Eq. 9)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("n,c", [(4, 8), (50, 256), (130, 999), (7, 5)])
+def test_pairwise_kernel_sweep(rng, n, c, dtype):
+    x = jnp.asarray(rng.normal(size=(n, c)) * 0.02, dtype)
+    h = ref.entropy_ref(x, 0.0025)
+    norms = jnp.linalg.norm(x.astype(jnp.float32), axis=-1)
+    got = pairwise_distance_pallas(x, norms, h, lam=10.0, interpret=True)
+    want = ref.pairwise_distance_ref(x, h, 10.0)
+    tol = 1e-3 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=tol, rtol=tol)
+
+
+def test_pairwise_kernel_symmetric_zero_diag(rng):
+    x = jnp.asarray(rng.normal(size=(33, 100)), jnp.float32)
+    h = ref.entropy_ref(x, 0.01)
+    norms = jnp.linalg.norm(x, axis=-1)
+    d = np.asarray(pairwise_distance_pallas(x, norms, h, interpret=True))
+    np.testing.assert_allclose(d, d.T, atol=1e-4)
+    np.testing.assert_allclose(np.diag(d), 0.0, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("b,h,kv,dh,s", [
+    (2, 8, 2, 64, 256),       # qwen2.5-style GQA 4:1
+    (1, 16, 8, 128, 512),     # mixtral-style
+    (2, 4, 4, 256, 128),      # gemma head_dim=256, MHA
+    (3, 2, 1, 64, 96),        # MQA, ragged block
+])
+def test_decode_attention_sweep(rng, b, h, kv, dh, s, dtype):
+    q = jnp.asarray(rng.normal(size=(b, h, dh)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, dh)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, dh)), dtype)
+    got = decode_attention_pallas(q, k, v, s, block_s=128, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, s)
+    tol = 5e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=tol, rtol=tol)
+
+
+def test_decode_attention_ragged_lengths(rng):
+    """Per-request cache lengths mask correctly."""
+    b, h, kv, dh, s = 3, 8, 4, 64, 320
+    q = jnp.asarray(rng.normal(size=(b, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, dh)), jnp.float32)
+    lens = np.array([1, 320, 130])
+    got = decode_attention_pallas(q, k, v, lens, block_s=64, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4)
+    # length=1: output equals v[:, 0] exactly for that row
+    np.testing.assert_allclose(
+        np.asarray(got[0].reshape(kv, h // kv, dh)),
+        np.asarray(jnp.broadcast_to(v[0, 0][:, None, :],
+                                    (kv, h // kv, dh))),
+        atol=1e-4)
+
+
+def test_decode_attention_block_invariance(rng):
+    b, h, kv, dh, s = 2, 4, 2, 64, 384
+    q = jnp.asarray(rng.normal(size=(b, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, dh)), jnp.float32)
+    o1 = decode_attention_pallas(q, k, v, 300, block_s=64, interpret=True)
+    o2 = decode_attention_pallas(q, k, v, 300, block_s=384, interpret=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ops dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_ops_dispatch_consistency(rng):
+    x = jnp.asarray(rng.normal(size=(12, 300)) * 0.05, jnp.float32)
+    e1 = ops.estimate_entropies(x, 0.0025, use_pallas=True)
+    e2 = ops.estimate_entropies(x, 0.0025, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), atol=1e-4)
+    d1 = ops.pairwise_distances(x, 0.0025, use_pallas=True)
+    d2 = ops.pairwise_distances(x, 0.0025, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), atol=1e-3)

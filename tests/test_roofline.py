@@ -1,0 +1,109 @@
+"""Roofline machinery: HLO cost parser (trip-count weighting, collective
+accounting) and the three-term roofline."""
+import numpy as np
+import pytest
+
+from repro.roofline import HW_V5E, model_flops, roofline_terms
+from repro.roofline.analysis import parse_collectives
+from repro.roofline.hlo_cost import analyze
+from repro.configs import SHAPES, get_config
+
+_HLO = """
+HloModule test
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %w = f32[8,8]{1,0} constant({...})
+  %d = f32[8,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups={}, to_apply=%sum
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%ni, %ar)
+}
+
+%cond (pc: (s32[], f32[8,8])) -> pred[] {
+  %pc = (s32[], f32[8,8]) parameter(0)
+  %ic = s32[] get-tuple-element(%pc), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%ic, %n), direction=LT
+}
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (arg: f32[8,8]) -> (s32[], f32[8,8]) {
+  %arg = f32[8,8]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,8]) tuple(%zero, %arg)
+  %ag = f32[16,8]{1,0} all-gather(%arg), dimensions={0}
+  ROOT %w0 = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+}
+"""
+
+
+def test_hlo_trip_count_weighting():
+    res = analyze(_HLO)
+    assert res["parse_ok"]
+    # dot: 2 * 64 * 8 = 1024 flops, x10 trips
+    assert res["flops"] == pytest.approx(10 * 2 * 64 * 8)
+    # collectives: all-reduce 256B x10 trips (x2 wire) + all-gather 512B x1
+    assert res["collective_bytes"]["all-reduce"] == pytest.approx(2560)
+    assert res["collective_bytes"]["all-gather"] == pytest.approx(512)
+    assert res["collective_total_weighted"] == pytest.approx(
+        2 * 2560 + 512)
+
+
+def test_parse_collectives_simple():
+    out = parse_collectives(
+        '%x = bf16[4,4]{1,0} all-gather(%y), dimensions={0}\n'
+        '%z = f32[2]{0} all-reduce(%w), to_apply=%s\n')
+    assert out["all-gather"] == 32
+    assert out["all-reduce"] == 8
+    assert out["total_weighted"] == 32 + 16
+
+
+def test_roofline_terms_bottleneck():
+    t = roofline_terms(197e12, 819e9, 0.0, HW_V5E)   # 1s compute, 1s mem
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(1.0)
+    t2 = roofline_terms(1.0, 1.0, 500e9, HW_V5E)
+    assert t2["bottleneck"] == "collective"
+    assert t2["collective_s"] == pytest.approx(10.0)
+
+
+def test_model_flops_moe_counts_active_only():
+    dense = get_config("qwen3-8b")
+    moe = get_config("mixtral-8x22b")
+    shape = SHAPES["train_4k"]
+    f_moe = model_flops(moe, shape, "train")
+    # top-2 of 8 experts: active params far below total; a full-expert
+    # count would be ~4x larger in the mlp term
+    total_mlp = moe.moe.num_experts * 3 * moe.d_model * moe.d_ff
+    active_mlp = moe.moe.top_k * 3 * moe.d_model * moe.d_ff
+    assert active_mlp < total_mlp / 3
+    assert f_moe > 0
+    # decode counts one token per sequence
+    f_dec = model_flops(dense, SHAPES["decode_32k"], "decode")
+    f_train = model_flops(dense, shape, "train")
+    assert f_dec < f_train / 1000
+
+
+def test_sharding_policy_modes():
+    import jax
+    from repro.launch.mesh import make_host_mesh
+    from repro.sharding import ShardingPolicy, param_pspecs
+    mesh = make_host_mesh()
+    for mode in ("2d", "fsdp"):
+        pol = ShardingPolicy(mesh, mode=mode)
+        assert (pol.tp_axis is None) == (mode == "fsdp")
+        params = {"layers": {"moe": {"wi0": jax.ShapeDtypeStruct(
+            (8, 64, 128), "float32")}}}
+        specs = param_pspecs(params, pol)  # must not raise
+        assert specs["layers"]["moe"]["wi0"] is not None
+    with pytest.raises(ValueError):
+        ShardingPolicy(mesh, mode="bogus")

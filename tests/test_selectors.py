@@ -1,0 +1,157 @@
+"""Selector API: HiCS-FL (Algorithm 1) + the five baselines."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_dirichlet_cohort
+from repro.core import SELECTORS, expected_bias_update, make_selector
+
+N, K, T = 40, 5, 100
+
+
+def _db_matrix(rng, num_clients=N, scale=0.025):
+    dists, n_imb = make_dirichlet_cohort(rng, num_clients=num_clients)
+    e = jnp.full(10, 0.1)
+    db = np.array(expected_bias_update(jnp.asarray(dists), e, scale, 2))
+    db += rng.normal(0, 1e-5, db.shape)
+    return db, n_imb
+
+
+@pytest.mark.parametrize("name", sorted(SELECTORS))
+def test_selects_k_distinct(name, rng):
+    db, _ = _db_matrix(rng)
+    sel = make_selector(name, num_clients=N, num_select=K, total_rounds=T)
+    for t in range(6):
+        ids = sel.select(t)
+        assert len(ids) == K
+        assert len(set(ids)) == K
+        assert all(0 <= i < N for i in ids)
+        sel.update(t, ids, bias_updates=db[ids],
+                   full_updates=(db if "full_all" in sel.requires
+                                 else db[ids]),
+                   losses=rng.random(N))
+
+
+def test_hics_coverage_sweep(rng):
+    """Alg. 1 lines 14-15: first ⌈N/K⌉ rounds cover every client once."""
+    db, _ = _db_matrix(rng)
+    sel = make_selector("hics", num_clients=N, num_select=K,
+                        total_rounds=T, seed=3)
+    seen = set()
+    for t in range(-(-N // K)):
+        ids = sel.select(t)
+        assert not (set(ids) & seen), "sweep must not repeat clients"
+        seen |= set(ids)
+        sel.update(t, ids, bias_updates=db[ids])
+    assert seen == set(range(N))
+
+
+def test_hics_prefers_balanced_clients(rng):
+    """The paper's headline behaviour: clients with balanced data are
+    sampled far more often while γ^t is large."""
+    db, n_imb = _db_matrix(rng)
+    sel = make_selector("hics", num_clients=N, num_select=K,
+                        total_rounds=300, temperature=0.0025, gamma0=4.0)
+    for t in range(-(-N // K)):
+        ids = sel.select(t)
+        sel.update(t, ids, bias_updates=db[ids])
+    counts = np.zeros(N)
+    for t in range(8, 60):
+        ids = sel.select(t)
+        counts[list(ids)] += 1
+        sel.update(t, ids, bias_updates=db[ids])
+    assert counts[n_imb:].mean() > 3 * max(counts[:n_imb].mean(), 0.1)
+
+
+def test_hics_anneals_to_uniform(rng):
+    """As γ^t → 0 cluster sampling becomes uniform (§3.4)."""
+    db, n_imb = _db_matrix(rng)
+    sel = make_selector("hics", num_clients=N, num_select=K,
+                        total_rounds=100, temperature=0.0025, gamma0=4.0,
+                        seed=1)
+    for t in range(-(-N // K)):
+        ids = sel.select(t)
+        sel.update(t, ids, bias_updates=db[ids])
+    counts = np.zeros(N)
+    trials = 400
+    for _ in range(trials):
+        ids = sel.select(100)  # t = T ⇒ γ = 0
+        counts[list(ids)] += 1
+    # uniform over clusters — imbalanced clusters hold most clients, so
+    # imbalanced clients must now receive a solid share of picks
+    assert counts[:n_imb].sum() > 0.35 * counts.sum()
+
+
+def test_powd_picks_highest_loss(rng):
+    sel = make_selector("pow-d", num_clients=N, num_select=K,
+                        total_rounds=T)
+    losses = np.zeros(N)
+    losses[[7, 13, 21, 33, 39]] = 10.0
+    sel.update(0, list(range(K)), losses=losses)
+    ids = sel.select(1)
+    assert set(ids) == {7, 13, 21, 33, 39}
+
+
+def test_divfl_spreads_over_gradient_space(rng):
+    """Facility location must pick diverse clients, one per blob."""
+    feats = np.concatenate([
+        rng.normal(0, 0.01, (10, 8)) + np.eye(8)[i] * 5
+        for i in range(4)
+    ])
+    sel = make_selector("divfl", num_clients=40, num_select=4,
+                        total_rounds=T)
+    sel.update(0, list(range(40)), full_updates=feats)
+    ids = sel.select(1)
+    blobs = {i // 10 for i in ids}
+    assert len(blobs) == 4
+
+
+def test_cs_warmup_then_clusters(rng):
+    db, _ = _db_matrix(rng)
+    sel = make_selector("cs", num_clients=N, num_select=K, total_rounds=T)
+    seen = set()
+    t = 0
+    while len(seen) < N:
+        ids = sel.select(t)
+        seen |= set(ids)
+        sel.update(t, ids, full_updates=db[ids])
+        t += 1
+        assert t < 3 * N / K, "warm-up must terminate"
+    ids = sel.select(t)
+    assert len(set(ids)) == K
+
+
+def test_fedcor_runs_past_warmup(rng):
+    sel = make_selector("fedcor", num_clients=N, num_select=K,
+                        total_rounds=T, warmup=3)
+    for t in range(8):
+        ids = sel.select(t)
+        assert len(set(ids)) == K
+        sel.update(t, ids, losses=rng.random(N))
+
+
+def test_selection_overhead_is_o_c(rng):
+    """Table 3: HiCS-FL server compute is O(C), independent of |θ|.
+    Feed CS/DivFL |θ|-sized features and HiCS C-sized features; HiCS
+    must be far cheaper per round."""
+    big = 50_000                      # |θ| stand-in
+    C = 10
+    db = rng.normal(size=(N, C))
+    full = rng.normal(size=(N, big))
+    hics = make_selector("hics", num_clients=N, num_select=K,
+                         total_rounds=T)
+    divfl = make_selector("divfl", num_clients=N, num_select=K,
+                          total_rounds=T)
+    for t in range(10):
+        ids = hics.select(t)
+        hics.update(t, ids, bias_updates=db[ids])
+        jds = divfl.select(t)
+        divfl.update(t, jds, full_updates=full)
+    assert hics.update_seconds < divfl.update_seconds + 0.5
+    # the Δb state is tiny: N x C floats
+    assert hics._delta_b.nbytes == N * C * 8
+
+
+def test_unknown_selector_raises():
+    with pytest.raises(KeyError):
+        make_selector("nope", num_clients=4, num_select=1, total_rounds=2)

@@ -15,8 +15,10 @@ import numpy as np
 from benchmarks.common import save_result
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.fused_stats import fused_stats_pallas
 from repro.kernels.hetero_entropy import entropy_pallas
-from repro.kernels.pairwise import pairwise_distance_pallas
+from repro.kernels.pairwise import (hics_selection_step_pallas,
+                                    pairwise_distance_pallas)
 
 
 def main(quick: bool = True):
@@ -37,6 +39,35 @@ def main(quick: bool = True):
     print(f"  entropy N={n} C={c}: ref {t_ref*1e3:.1f} ms, "
           f"kernel-vs-ref err {err:.2e}", flush=True)
     assert err < 1e-3
+
+    # fused single-sweep stats at the same scale: ONE pass replaces the
+    # entropy kernel + jnp.linalg.norm + pad copy of the unfused path
+    ent_f, norm_f, rms_f = fused_stats_pallas(x, 0.0025, interpret=True)
+    want_norm = jnp.linalg.norm(x, axis=-1)
+    err_e = float(jnp.max(jnp.abs(ent_f - want)))
+    err_n = float(jnp.max(jnp.abs(norm_f - want_norm)))
+    err_r = float(jnp.max(jnp.abs(
+        rms_f - jnp.sqrt(jnp.mean(jnp.square(x), axis=-1)))))
+    out["fused_stats"] = {"n": n, "c": c, "max_err_entropy": err_e,
+                          "max_err_norm": err_n, "max_err_rms": err_r,
+                          "hbm_sweeps_pre_gram": 1,
+                          "unfused_sweeps_pre_gram": 3}
+    print(f"  fused-stats N={n} C={c}: entropy err {err_e:.2e}, "
+          f"norm err {err_n:.2e}, rms err {err_r:.2e} (1 sweep vs 3)",
+          flush=True)
+    assert err_e < 1e-3 and err_n < 1e-3 and err_r < 1e-3
+
+    # end-to-end fused selection step vs the stitched oracle
+    ent_s, dist_s = hics_selection_step_pallas(x, 0.0025, lam=10.0,
+                                               interpret=True)
+    want_e, want_d = ref.selection_step_ref(x, 0.0025, 10.0)
+    err_se = float(jnp.max(jnp.abs(ent_s - want_e)))
+    err_s = float(jnp.max(jnp.abs(dist_s - want_d)))
+    out["selection_step"] = {"n": n, "c": c, "max_err": err_s,
+                             "max_err_entropy": err_se}
+    print(f"  selection-step N={n} C={c}: dist err {err_s:.2e}, "
+          f"entropy err {err_se:.2e}", flush=True)
+    assert err_s < 5e-3 and err_se < 1e-3
 
     # pairwise Eq. 9 at the same scale
     h = ref.entropy_ref(x, 0.0025)

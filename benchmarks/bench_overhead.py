@@ -2,12 +2,17 @@
 
 Measures the wall-time of select()+update() per selector while scaling
 the model dimension |θ| (CS / DivFL / pow-d costs grow with |θ|) and the
-class count C (HiCS-FL's only dimension).  Also measures the Pallas
-kernel path (interpret mode) at LLM vocab scale vs the numpy/jnp path.
+class count C (HiCS-FL's only dimension), plus the fused-vs-unfused
+selection-step comparison (one jitted sweep vs the stitched
+entropy → norm → distance pipeline the selector used before).  The
+fused numbers land in ``BENCH_selection.json`` at the repo root so the
+perf trajectory is recorded per PR.
 """
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import numpy as np
 
@@ -15,6 +20,7 @@ from benchmarks.common import md_table, save_result
 from repro.core import make_selector
 
 N, K, T = 50, 5, 100
+REPO_ROOT = Path(__file__).resolve().parent.parent
 
 
 def _drive(sel, db, full, losses, rounds=8) -> float:
@@ -61,10 +67,58 @@ def run() -> dict:
     return out
 
 
+def selection_step_comparison() -> dict:
+    """Fused (one jitted step) vs unfused (eager entropy → norm →
+    distance, the seed selector path) on the CPU oracle backend."""
+    import jax.numpy as jnp
+    from repro.core.distance import distance_matrix
+    from repro.core.hetero import estimate_entropy
+    from repro.kernels import hics_selection_step
+
+    rng = np.random.default_rng(0)
+    out: dict = {}
+    for (n, c) in ((64, 32_768), (256, 8192)):
+        x = jnp.asarray(rng.normal(size=(n, c)) * 0.01, jnp.float32)
+
+        def unfused():
+            ent = estimate_entropy(x, 0.0025)
+            return ent, distance_matrix(x, 0.0025, 10.0, entropies=ent)
+
+        def fused():
+            return hics_selection_step(x, 0.0025, lam=10.0,
+                                       use_pallas=False)
+
+        fused()[1].block_until_ready()          # jit warm-up
+        t_u = t_f = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            unfused()[1].block_until_ready()
+            t_u = min(t_u, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            fused()[1].block_until_ready()
+            t_f = min(t_f, time.perf_counter() - t0)
+        key = f"N{n}_C{c}"
+        out[key] = {"n": n, "c": c, "unfused_seconds": t_u,
+                    "fused_seconds": t_f, "speedup": t_u / t_f}
+        print(f"  selection step N={n} C={c}: unfused {t_u*1e3:7.2f} ms"
+              f"  fused {t_f*1e3:7.2f} ms  ({t_u/t_f:.2f}x)", flush=True)
+    return out
+
+
 def main(quick: bool = True):
     print("== bench_overhead (Table 3 analogue) ==", flush=True)
     res = run()
+    sel = selection_step_comparison()
+    res["selection_step"] = sel
     save_result("table3_overhead", res)
+    # repo-root perf trajectory artifact (one file per concern)
+    (REPO_ROOT / "BENCH_selection.json").write_text(json.dumps({
+        "what": "fused vs unfused HiCS selection step (CPU oracle "
+                "backend; TPU path is the Pallas kernel pipeline)",
+        "pre_gram_hbm_sweeps": {"fused": 1, "unfused": 3},
+        "results": sel,
+    }, indent=1))
+    print(f"  wrote {REPO_ROOT / 'BENCH_selection.json'}", flush=True)
     thetas = sorted(next(iter(res.values())).keys()) \
         if "random" in res else []
     rows = []

@@ -1,8 +1,13 @@
 """Benchmark harness entrypoint — one module per paper table/figure.
 
   python -m benchmarks.run            # quick tier (default)
+  python -m benchmarks.run --quick    # same, explicit
   python -m benchmarks.run --full     # paper-scale settings
   python -m benchmarks.run --only selectors,overhead
+
+The quick tier's ``overhead`` module also writes the fused-vs-unfused
+selection-step numbers to ``BENCH_selection.json`` at the repo root
+(the per-PR perf trajectory).
 
 Modules:
   selectors  — Tables 1 + 2 (final acc, rounds-to-target, speedup) +
@@ -24,8 +29,11 @@ MODULES = ("selectors", "overhead", "estimation", "ablations", "kernels",
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true",
-                    help="paper-scale rounds/seeds (slow)")
+    tier = ap.add_mutually_exclusive_group()
+    tier.add_argument("--full", action="store_true",
+                      help="paper-scale rounds/seeds (slow)")
+    tier.add_argument("--quick", action="store_true",
+                      help="quick tier (the default)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset of: " + ",".join(MODULES))
     args = ap.parse_args()

@@ -3,7 +3,8 @@ model with HiCS-FL client selection, for a few hundred rounds.
 
 This is the framework-scale regime the paper's O(C) selection is built
 for: the selector reads only the LM-head update (here the bias-free ΔW
-row-mean surrogate — DESIGN.md §5), never the 100M-param body.
+row-mean surrogate, see ``repro.core.hetero.delta_b_from_head_delta``),
+never the 100M-param body.
 
   PYTHONPATH=src python examples/federated_finetune.py            # ~100M
   PYTHONPATH=src python examples/federated_finetune.py --tiny     # CI-fast

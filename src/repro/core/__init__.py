@@ -12,7 +12,8 @@ from repro.core.hetero import (delta_b_from_head_delta,
                                dissimilarity_envelope,
                                entropy_separation_bound, estimate_entropy,
                                expected_bias_update, head_bias_update,
-                               label_entropy, softmax_entropy)
+                               head_bias_updates_stacked, label_entropy,
+                               softmax_entropy)
 from repro.core.sampling import (anneal, cluster_probs, hierarchical_sample,
                                  sampling_probabilities)
 from repro.core.selectors import (SELECTORS, ClientSelector,
@@ -25,7 +26,8 @@ __all__ = [
     "agglomerate", "cluster_means", "distance_matrix", "pairwise_arccos",
     "delta_b_from_head_delta", "dissimilarity_envelope",
     "entropy_separation_bound", "estimate_entropy", "expected_bias_update",
-    "head_bias_update", "label_entropy", "softmax_entropy", "anneal",
+    "head_bias_update", "head_bias_updates_stacked", "label_entropy",
+    "softmax_entropy", "anneal",
     "cluster_probs", "hierarchical_sample", "sampling_probabilities",
     "SELECTORS", "ClientSelector", "ClusteredSamplingSelector",
     "DivFLSelector", "FedCorSelector", "HiCSFLSelector",

@@ -10,8 +10,14 @@ clustering with Lance–Williams distance updates:
     average  (UPGMA)
     complete / single
 
-O(N³) naive nearest-pair search — plenty for N ≤ a few thousand clients
-(selection happens once per round, server-side).
+The merge loop keeps a lazily-verified per-row minimum cache: the
+cached value is always a LOWER bound on the row's true minimum (merges
+only update it with ``np.minimum``), and the picked row is verified
+with one row argmin — which simultaneously yields the partner column
+and reproduces the naive flat-argmin tie order exactly.  Each merge is
+then O(N) amortized with ~a dozen vector ops, no per-merge boolean-mask
+copies, and no (N, N) argmin.  Rows retired by a merge are parked at
++inf so inactive entries never win.
 """
 from __future__ import annotations
 
@@ -45,45 +51,80 @@ def agglomerate(dist: np.ndarray, num_clusters: int,
         d = d ** 2
     np.fill_diagonal(d, np.inf)
 
-    active = np.ones(n, dtype=bool)
-    sizes = np.ones(n, dtype=np.int64)
-    labels = np.arange(n)
+    sizes = np.ones(n, dtype=np.float64)
+    # merge forest: parent[j] = i records "cluster j absorbed into i"
+    # (always i < j); labels resolve by chasing parents once at the end
+    parent = np.arange(n)
     merges = n - num_clusters
+    # Lazily-verified nearest-pair cache.  Invariant: row_min[k] ≤ true
+    # min of row k for every live row.  Improvements are folded in
+    # eagerly (np.minimum); entries that a merge RAISED (the cached
+    # best edge pointed at one of the merged clusters) are left
+    # stale-low and repaired only if the row is ever picked: the verify
+    # argmin over the actual row exposes the true minimum.
+    row_min = d.min(axis=1)
     for _ in range(merges):
-        flat = np.argmin(d)
-        i, j = np.unravel_index(flat, d.shape)
+        while True:
+            i = int(np.argmin(row_min))
+            j = int(np.argmin(d[i]))        # true row min + tie column
+            true_min = d[i, j]
+            if true_min == row_min[i]:
+                break
+            row_min[i] = true_min           # was stale-low: repair, retry
         if i > j:
             i, j = j, i
-        # Lance–Williams update of d(k, i∪j) for all active k != i, j
+        dij = d[i, j]
         ni, nj = sizes[i], sizes[j]
-        k_mask = active.copy()
-        k_mask[i] = k_mask[j] = False
-        dik, djk = d[i, k_mask], d[j, k_mask]
+        # Lance–Williams update of d(k, i∪j), vectorized over ALL k:
+        # retired/self entries are +inf and stay +inf through each
+        # formula (no inf−inf terms arise), so no mask copy is needed.
+        di, dj = d[i], d[j]
         if linkage == "ward":
-            nk = sizes[k_mask].astype(np.float64)
-            tot = ni + nj + nk
-            new = ((ni + nk) * dik + (nj + nk) * djk - nk * d[i, j]) / tot
+            nk = sizes
+            new = (ni + nk) * di
+            new += (nj + nk) * dj
+            new -= nk * dij
+            new /= ni + nj + nk
         elif linkage == "average":
-            new = (ni * dik + nj * djk) / (ni + nj)
+            new = ni * di
+            new += nj * dj
+            new /= ni + nj
         elif linkage == "complete":
-            new = np.maximum(dik, djk)
+            new = np.maximum(di, dj)
         else:  # single
-            new = np.minimum(dik, djk)
-        d[i, k_mask] = new
-        d[k_mask, i] = new
-        d[j, :] = np.inf
+            new = np.minimum(di, dj)
+        new[i] = np.inf                      # keep the diagonal +inf
+        new[j] = np.inf
+        d[i, :] = new
+        d[:, i] = new
+        # retire j: column only — row j is never read again (row_min[j]
+        # goes to +inf below so j is never picked, and row rescans read
+        # other rows, whose j-th element this write covers)
         d[:, j] = np.inf
-        active[j] = False
         sizes[i] = ni + nj
-        labels[labels == labels[j]] = labels[i]
+        sizes[j] = 0.0
+        parent[j] = i
 
-    # relabel 0..M-1 by first appearance
+        # --- refresh the min cache (lower bounds only) ----------------
+        # Other rows: fold in the new edge to the merged cluster.  Rows
+        # whose old minimum sat at column i or j may now be stale-low;
+        # the pick-time verify repairs them if it matters.
+        np.minimum(row_min, new, out=row_min)
+        row_min[i] = new.min()               # row i changed wholesale
+        row_min[j] = np.inf                  # retired
+
+    # resolve the merge forest (parents always point to lower indices,
+    # so one increasing pass suffices), then relabel 0..M-1 by first
+    # appearance
+    labels = np.arange(n)
+    for k in range(n):
+        labels[k] = labels[parent[k]]
     uniq: dict = {}
     out = np.empty(n, dtype=np.int64)
-    for idx, lab in enumerate(labels):
+    for k, lab in enumerate(labels):
         if lab not in uniq:
             uniq[lab] = len(uniq)
-        out[idx] = uniq[lab]
+        out[k] = uniq[lab]
     return out
 
 

@@ -24,7 +24,8 @@ Beyond-paper extension: modern LM heads are bias-free.  ``ΔW`` of the
 head (shape (d, C) or (C, d)) satisfies the same per-class structure —
 each class column's update is ``(D_i Σ E_c − E_i)·z̄``-shaped — so the
 *row/column mean* of ΔW is a drop-in surrogate for Δb
-(``delta_b_from_head_delta``).  DESIGN.md §5 records this.
+(``delta_b_from_head_delta``); ROADMAP.md's open items track the
+remaining estimator work.
 """
 from __future__ import annotations
 
@@ -60,7 +61,8 @@ def estimate_entropy(delta_b: jnp.ndarray, temperature: float,
     works across heads).  The paper's fixed-T estimator implicitly
     assumes comparable magnitudes; in our experiments the normalized
     variant raises corr(Ĥ, H_true) from ≈0.4 to ≈0.86 when Δb's are
-    collected across many rounds (see EXPERIMENTS.md).
+    collected across many rounds (reproduce with
+    ``benchmarks/bench_estimation.py``).
     """
     if normalize:
         rms = jnp.sqrt(jnp.mean(jnp.square(delta_b), axis=-1,
@@ -118,6 +120,31 @@ def head_bias_update(params_before, params_after,
     wpath = bias_path.rsplit("/", 1)[0] + "/w"
     if wpath in flat_b:
         return delta_b_from_head_delta(flat_a[wpath] - flat_b[wpath])
+    return None
+
+
+def head_bias_updates_stacked(params_before, stacked_after,
+                              bias_path: str = "lm_head/b"
+                              ) -> Optional[jnp.ndarray]:
+    """Cohort-vectorized Δb extraction: (global params, K-stacked local
+    params) -> (K, C), with no per-client Python loop.
+
+    ``stacked_after`` is the vmapped LocalUpdate output (every leaf has
+    a leading K axis).  Same head resolution as
+    :func:`head_bias_update`: real bias at ``bias_path`` first, else
+    the feature-mean ΔW surrogate at ``lm_head/w``; None when the model
+    has no recognizable head.
+    """
+    flat_b = dict(_flatten(params_before))
+    flat_a = dict(_flatten(stacked_after))
+    if bias_path in flat_b:
+        return flat_a[bias_path] - flat_b[bias_path][None]
+    wpath = bias_path.rsplit("/", 1)[0] + "/w"
+    if wpath in flat_b:
+        # (K, d, C) — per-class mean over the feature axis, matching
+        # delta_b_from_head_delta(class_axis=-1) per client
+        dw = flat_a[wpath] - flat_b[wpath][None]
+        return jnp.mean(dw, axis=1)
     return None
 
 

@@ -18,21 +18,21 @@ round — this is the bookkeeping behind the Table 3 overhead comparison:
     hics     : bias updates of participants        (O(C) — the paper)
 
 All selectors are pure numpy server logic; nothing here touches the
-mesh.  HiCS-FL's O(C) hot paths (entropy over (N, C), pairwise Eq. 9)
-have Pallas TPU kernels in ``repro/kernels`` for vocab-sized C.
+mesh.  HiCS-FL's O(C) hot path (entropy + norms + pairwise Eq. 9) is
+one fused, jitted selection step (``repro.kernels.hics_selection_step``)
+— a single pre-Gram HBM sweep over (N, C), Pallas on TPU.
 """
 from __future__ import annotations
 
-import math
 import time
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core.clustering import agglomerate, cluster_means
-from repro.core.distance import distance_matrix
 from repro.core.hetero import estimate_entropy
 from repro.core.sampling import anneal, hierarchical_sample
+from repro.kernels import hics_selection_step
 
 # ---------------------------------------------------------------------------
 # Base
@@ -294,7 +294,8 @@ class HiCSFLSelector(ClientSelector):
 
     def __init__(self, *a, temperature: float = 0.0025, lam: float = 10.0,
                  gamma0: float = 4.0, num_clusters: Optional[int] = None,
-                 linkage: str = "ward", normalize: bool = False, **kw):
+                 linkage: str = "ward", normalize: bool = False,
+                 gram_in_bf16: bool = False, **kw):
         super().__init__(*a, **kw)
         self.temperature = float(temperature)
         self.lam = float(lam)
@@ -303,6 +304,8 @@ class HiCSFLSelector(ClientSelector):
         self.linkage = linkage
         # beyond-paper: magnitude-invariant Ĥ (see hetero.estimate_entropy)
         self.normalize = bool(normalize)
+        # 2× Gram bandwidth on the TPU kernel path (f32 accumulation)
+        self.gram_in_bf16 = bool(gram_in_bf16)
         self._delta_b: Optional[np.ndarray] = None     # (N, C), zeros=unseen
         self._seen = np.zeros(self.n, dtype=bool)
         self._coverage_pool = list(range(self.n))
@@ -325,10 +328,12 @@ class HiCSFLSelector(ClientSelector):
     def _select(self, t: int) -> List[int]:
         if self._coverage_pool or self._delta_b is None:
             return self._sweep()
-        ent = np.asarray(estimate_entropy(self._delta_b, self.temperature,
-                                          normalize=self.normalize))
-        dist = np.asarray(distance_matrix(self._delta_b, self.temperature,
-                                          self.lam, entropies=ent))
+        # one fused device step: entropy + norms + Eq. 9 distance in a
+        # single pre-Gram sweep over (N, C), no host round trip between
+        ent_d, dist_d = hics_selection_step(
+            self._delta_b, self.temperature, lam=self.lam,
+            normalize=self.normalize, gram_in_bf16=self.gram_in_bf16)
+        ent, dist = np.asarray(ent_d), np.asarray(dist_d)
         labels = agglomerate(dist, self.m, linkage=self.linkage)
         means = cluster_means(ent, labels, int(labels.max()) + 1)
         gamma_t = anneal(self.gamma0, t, self.total_rounds)

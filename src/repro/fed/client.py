@@ -75,11 +75,15 @@ def _moon_term(feat, feat_glob, feat_prev, tau, mask):
 
 def make_local_update(apply_fn: Callable, spec: LocalSpec,
                       features_fn: Optional[Callable] = None) -> Callable:
-    """Build ``local_update(global_params, extra, x, y, mask, rng)``.
+    """Build ``local_update(global_params, extra, x, y, mask, rng,
+    lr_scale=1.0)``.
 
     extra: dict with optional per-client persistent state —
       "h"    : FedDyn's gradient-correction pytree (same shape as params)
       "prev" : Moon's previous-round local params
+    ``lr_scale`` is a TRACED multiplier on ``spec.lr`` — the server
+    passes its decay schedule through it so a new decay value never
+    retraces the jitted cohort step.
     Returns (local_params, new_extra, metrics).
     """
     opt = OPTIMIZERS[spec.optimizer](spec.lr)
@@ -108,7 +112,8 @@ def make_local_update(apply_fn: Callable, spec: LocalSpec,
             / jnp.maximum(mb.sum(), 1.0)
         return loss, acc
 
-    def local_update(global_params, extra, x, y, mask, rng):
+    def local_update(global_params, extra, x, y, mask, rng,
+                     lr_scale=1.0):
         s_max = x.shape[0]
         bs = min(spec.batch_size, s_max)
         nb = max(1, s_max // bs)
@@ -129,7 +134,8 @@ def make_local_update(apply_fn: Callable, spec: LocalSpec,
                 # fully-masked (padding-only) batches must be a no-op
                 live = (mi.sum() > 0).astype(jnp.float32)
                 grads = jax.tree_util.tree_map(lambda g: g * live, grads)
-                updates, opt_state = opt.update(grads, opt_state, params)
+                updates, opt_state = opt.update(grads, opt_state, params,
+                                                lr_scale=lr_scale)
                 params = apply_updates(params, updates)
                 return (params, opt_state), loss
 

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import head_bias_update, make_selector
+from repro.core import head_bias_updates_stacked, make_selector
 from repro.fed.client import (LocalSpec, init_extra, make_eval_fn,
                               make_local_update)
 
@@ -83,10 +83,11 @@ class FederatedServer:
             cfg.selector, num_clients=cfg.num_clients,
             num_select=cfg.num_select, total_rounds=cfg.rounds,
             weights=sizes, seed=cfg.seed, **kw)
-        self.local_spec = cfg.local
         self._lu = make_local_update(apply_fn, cfg.local, features_fn)
+        # lr_scale rides along as a TRACED scalar (in_axes None), so the
+        # paper's lr-decay schedule never re-jits the cohort step
         self._lu_vmapped = jax.jit(jax.vmap(
-            self._lu, in_axes=(None, 0, 0, 0, 0, 0)))
+            self._lu, in_axes=(None, 0, 0, 0, 0, 0, None)))
         self._eval = make_eval_fn(apply_fn)
         self._eval_vmapped = jax.jit(jax.vmap(
             lambda p, x, y, m: self._eval(p, x, y, m),
@@ -114,18 +115,12 @@ class FederatedServer:
     # ------------------------------------------------------------------
     def run(self, progress: bool = False) -> Dict[str, list]:
         cfg = self.cfg
-        lr0 = cfg.local.lr
         for t in range(cfg.rounds):
             t_start = time.perf_counter()
-            # paper's lr schedule: decay 0.5 every 10 rounds
-            decay = cfg.lr_decay ** (t // cfg.lr_decay_every)
-            if decay != 1.0:
-                self.local_spec = dataclasses.replace(cfg.local,
-                                                      lr=lr0 * decay)
-                self._lu_vmapped = jax.jit(jax.vmap(
-                    make_local_update(self.apply_fn, self.local_spec),
-                    in_axes=(None, 0, 0, 0, 0, 0))) \
-                    if t % cfg.lr_decay_every == 0 else self._lu_vmapped
+            # paper's lr schedule: decay 0.5 every 10 rounds — passed as
+            # a traced array so a new value is just new data, not a
+            # retrace of the cohort step
+            decay = jnp.float32(cfg.lr_decay ** (t // cfg.lr_decay_every))
 
             ids = np.asarray(self.selector.select(t))
             self.rng, kr = jax.random.split(self.rng)
@@ -134,7 +129,7 @@ class FederatedServer:
                       if self._extras else {})
             new_params, new_extras, metrics = self._lu_vmapped(
                 self.params, extras, self.x[ids], self.y[ids],
-                self.mask[ids], rngs)
+                self.mask[ids], rngs, decay)
             if self._extras:
                 self._extras = _tree_stack_scatter(self._extras, ids,
                                                    new_extras)
@@ -188,15 +183,11 @@ class FederatedServer:
 
     # ------------------------------------------------------------------
     def _bias_updates(self, new_params_stacked) -> Optional[np.ndarray]:
-        """Δb (or bias-free ΔW surrogate) per participant — (K, C)."""
-        def one(i):
-            pk = jax.tree_util.tree_map(lambda a: a[i], new_params_stacked)
-            return head_bias_update(self.params, pk)
-        first = one(0)
-        if first is None:
-            return None
-        k = jax.tree_util.tree_leaves(new_params_stacked)[0].shape[0]
-        return jnp.stack([one(i) for i in range(k)])
+        """Δb (or bias-free ΔW surrogate) per participant — (K, C).
+
+        One stacked-leaf subtraction over the whole cohort; no
+        per-client Python loop."""
+        return head_bias_updates_stacked(self.params, new_params_stacked)
 
 
 def rounds_to_accuracy(history: Dict[str, list], target: float

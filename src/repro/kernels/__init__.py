@@ -1,15 +1,21 @@
 """Pallas TPU kernels for the framework's compute hot-spots:
 
+  fused_stats      — single-sweep entropy + L2 norm + RMS over (N, C)
+                     (the pre-Gram stage of the HiCS selection step)
   hetero_entropy   — fused temperature-softmax entropy over class blocks
-                     (HiCS-FL server at LLM-vocab scale)
-  pairwise         — Eq. 9 distance: MXU-tiled Gram + arccos/λ|ΔĤ| epilogue
+                     (entropy-only API; fused_stats supersedes it on the
+                     selection path)
+  pairwise         — Eq. 9 distance: MXU-tiled Gram + arccos/λ|ΔĤ|
+                     epilogue, plus the end-to-end fused selection step
   decode_attention — GQA flash-decode for the serving hot loop
 
 Each kernel has a pure-jnp oracle in ref.py; ops.py is the dispatching
 public API (TPU -> compiled Pallas, CPU -> interpret/oracle).
 """
-from repro.kernels.ops import (estimate_entropies, gqa_decode_attention,
+from repro.kernels.ops import (estimate_entropies, fused_row_stats,
+                               gqa_decode_attention, hics_selection_step,
                                pairwise_distances)
 
-__all__ = ["estimate_entropies", "gqa_decode_attention",
+__all__ = ["estimate_entropies", "fused_row_stats",
+           "gqa_decode_attention", "hics_selection_step",
            "pairwise_distances"]

@@ -5,18 +5,23 @@ run under ``interpret=True`` or fall back to the jnp oracle — both
 paths are bit-for-bit validated against ``ref.py`` by the test suite.
 
     estimate_entropies(updates, T)          (N, C) -> (N,)
+    hics_selection_step(updates, T, lam)    (N, C) -> ((N,), (N, N))
     pairwise_distances(updates, T, lam)     (N, C) -> (N, N)   [Eq. 9]
     gqa_decode_attention(q, k, v, length)   one-token flash decode
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.fused_stats import fused_stats_pallas
 from repro.kernels.hetero_entropy import entropy_pallas
-from repro.kernels.pairwise import pairwise_distance_pallas
+from repro.kernels.pairwise import (hics_selection_step_pallas,
+                                    pairwise_distance_pallas)
 
 
 def _on_tpu() -> bool:
@@ -33,17 +38,53 @@ def estimate_entropies(updates: jnp.ndarray, temperature: float,
     return ref.entropy_ref(updates, temperature)
 
 
+def fused_row_stats(updates: jnp.ndarray, temperature: float,
+                    use_pallas: bool | None = None):
+    """(Ĥ, |Δb|₂, RMS) per client in one HBM sweep over (N, C)."""
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return fused_stats_pallas(updates, temperature,
+                                  interpret=not _on_tpu())
+    return ref.fused_stats_ref(updates, temperature)
+
+
+def hics_selection_step(updates: jnp.ndarray, temperature: float,
+                        lam: float = 10.0, normalize: bool = False,
+                        gram_in_bf16: bool = False,
+                        use_pallas: bool | None = None):
+    """The entire pre-cluster selection pipeline in one jitted step:
+
+        (N, C) Δb  ->  (Ĥ (N,), Eq. 9 distance (N, N))
+
+    One pad, one pre-Gram sweep (fused entropy+norm+RMS), then the
+    Gram/arccos kernel with no host round trip.  ``normalize=True``
+    uses the RMS-normalized estimator (one extra stats sweep on the
+    kernel path).  Pallas on TPU, jitted oracle on CPU.
+    """
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return hics_selection_step_pallas(
+            updates, temperature, lam=lam, normalize=normalize,
+            gram_in_bf16=gram_in_bf16, interpret=not _on_tpu())
+    return _selection_step_ref_jit(updates, temperature, lam, normalize)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3))
+def _selection_step_ref_jit(updates, temperature, lam, normalize):
+    return ref.selection_step_ref(updates, temperature, lam,
+                                  normalize=normalize)
+
+
 def pairwise_distances(updates: jnp.ndarray, temperature: float,
                        lam: float = 10.0,
                        use_pallas: bool | None = None) -> jnp.ndarray:
-    """Full Eq. 9 matrix: entropy pass + fused Gram/arccos kernel."""
+    """Full Eq. 9 matrix: one fused stats sweep + Gram/arccos kernel."""
     use = _on_tpu() if use_pallas is None else use_pallas
     if use:
-        interp = not _on_tpu()
-        h = entropy_pallas(updates, temperature, interpret=interp)
-        norms = jnp.linalg.norm(updates.astype(jnp.float32), axis=-1)
-        return pairwise_distance_pallas(updates, norms, h, lam=lam,
-                                        interpret=interp)
+        _, dist = hics_selection_step_pallas(updates, temperature,
+                                             lam=lam,
+                                             interpret=not _on_tpu())
+        return dist
     h = ref.entropy_ref(updates, temperature)
     return ref.pairwise_distance_ref(updates, h, lam)
 

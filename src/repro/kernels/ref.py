@@ -20,6 +20,43 @@ def entropy_ref(updates: jnp.ndarray, temperature: float) -> jnp.ndarray:
     return jnp.log(z) - s / z
 
 
+def fused_stats_ref(updates: jnp.ndarray, temperature: float,
+                    row_scale: jnp.ndarray | None = None):
+    """Oracle for the fused stats kernel: one logical pass over (N, C).
+
+    Returns (entropy, l2_norm, rms), each (N,) float32.  ``row_scale``
+    (N,) optionally multiplies each row before the tempered softmax
+    (norm/RMS are always of the raw rows) — the hook the normalized
+    estimator path uses with scale = 1/RMS.
+    """
+    x = updates.astype(jnp.float32)
+    scaled = x if row_scale is None else x * row_scale.astype(
+        jnp.float32)[:, None]
+    ent = entropy_ref(scaled, temperature)
+    sumsq = jnp.sum(jnp.square(x), axis=-1)
+    norm = jnp.sqrt(sumsq)
+    rms = jnp.sqrt(sumsq / x.shape[-1])
+    return ent, norm, rms
+
+
+def selection_step_ref(updates: jnp.ndarray, temperature: float,
+                       lam: float, normalize: bool = False):
+    """Oracle for the fused HiCS selection step: (N, C) -> (Ĥ, Eq. 9 D).
+
+    ``normalize=True`` RMS-normalizes each row before the tempered
+    softmax (the magnitude-invariant estimator of
+    ``core.hetero.estimate_entropy``); the angular term is unaffected
+    because cosine similarity is per-row scale invariant.
+    """
+    x = updates.astype(jnp.float32)
+    if normalize:
+        rms = jnp.sqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True))
+        h = entropy_ref(x / jnp.clip(rms, 1e-12, None), temperature)
+    else:
+        h = entropy_ref(x, temperature)
+    return h, pairwise_distance_ref(x, h, lam)
+
+
 def pairwise_distance_ref(updates: jnp.ndarray, entropies: jnp.ndarray,
                           lam: float, eps: float = 1e-8) -> jnp.ndarray:
     """Eq. 9 distance matrix.  updates (N, C), entropies (N,) -> (N, N)."""

@@ -206,3 +206,81 @@ def test_rounds_to_accuracy_helper():
     hist = {"test_round": [0, 5, 10], "test_acc": [0.1, 0.5, 0.9]}
     assert rounds_to_accuracy(hist, 0.5) == 5
     assert rounds_to_accuracy(hist, 0.95) is None
+
+
+def test_server_zero_retrace_after_round0():
+    """lr decay is a traced argument: the vmapped cohort step must
+    trace exactly once across 25 rounds (two decay boundaries)."""
+    spec = ExperimentSpec(
+        arch="paper-mlp", num_clients=6, num_select=2, rounds=25,
+        alphas=(0.05, 5.0), selector="random",
+        local=LocalSpec(algo="fedavg", optimizer="sgd", lr=0.1,
+                        epochs=1, batch_size=32),
+        samples_train=400, samples_test=100, eval_every=50, seed=0)
+    server, _ = build(spec)
+    traces = []
+    lu = server._lu
+
+    def counting(*args):
+        traces.append(1)
+        return lu(*args)
+
+    server._lu_vmapped = jax.jit(jax.vmap(
+        counting, in_axes=(None, 0, 0, 0, 0, 0, None)))
+    server.run()
+    assert len(traces) == 1, f"cohort step traced {len(traces)} times"
+
+
+def test_lr_scale_equals_baked_lr():
+    """local_update(lr_scale=s) must match a spec with lr *= s."""
+    rng = np.random.default_rng(3)
+    x, y, spec = _tiny_problem(rng)
+    cfg = get_config("paper-mlp")
+    init, apply, _ = make_classifier_with_features(cfg,
+                                                   input_dim=spec.dim)
+    params = init(jax.random.PRNGKey(0))
+    mask = jnp.ones(len(y))
+    base = LocalSpec(algo="fedavg", optimizer="sgd", lr=0.08, epochs=2,
+                     batch_size=32)
+    lu = make_local_update(apply, base)
+    p_scaled, _, _ = lu(params, {}, jnp.asarray(x), jnp.asarray(y), mask,
+                        jax.random.PRNGKey(1), 0.5)
+    lu_baked = make_local_update(
+        apply, dataclasses.replace(base, lr=0.08 * 0.5))
+    p_baked, _, _ = lu_baked(params, {}, jnp.asarray(x), jnp.asarray(y),
+                             mask, jax.random.PRNGKey(1))
+    for a, b in zip(jax.tree_util.tree_leaves(p_scaled),
+                    jax.tree_util.tree_leaves(p_baked)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6)
+
+
+def test_head_bias_updates_stacked_matches_per_client():
+    from repro.core import head_bias_update, head_bias_updates_stacked
+    rng = np.random.default_rng(5)
+    k, d, c = 4, 6, 10
+    before = {"body": {"w": jnp.asarray(rng.normal(size=(d, d)))},
+              "lm_head": {"w": jnp.asarray(rng.normal(size=(d, c))),
+                          "b": jnp.asarray(rng.normal(size=(c,)))}}
+    stacked = jax.tree_util.tree_map(
+        lambda a: jnp.asarray(
+            rng.normal(size=(k,) + a.shape)), before)
+    got = head_bias_updates_stacked(before, stacked)
+    for i in range(k):
+        pk = jax.tree_util.tree_map(lambda a: a[i], stacked)
+        want = head_bias_update(before, pk)
+        np.testing.assert_allclose(np.asarray(got[i]), np.asarray(want),
+                                   atol=1e-6)
+    # bias-free head falls back to the ΔW surrogate
+    before_nb = {"lm_head": {"w": before["lm_head"]["w"]}}
+    stacked_nb = {"lm_head": {"w": stacked["lm_head"]["w"]}}
+    got_nb = head_bias_updates_stacked(before_nb, stacked_nb)
+    assert got_nb.shape == (k, c)
+    for i in range(k):
+        pk = jax.tree_util.tree_map(lambda a: a[i], stacked_nb)
+        want = head_bias_update(before_nb, pk)
+        np.testing.assert_allclose(np.asarray(got_nb[i]),
+                                   np.asarray(want), atol=1e-6)
+    # no head at all -> None
+    assert head_bias_updates_stacked({"x": jnp.zeros(3)},
+                                     {"x": jnp.zeros((2, 3))}) is None

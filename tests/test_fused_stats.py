@@ -1,0 +1,138 @@
+"""Fused single-sweep stats kernel + the end-to-end selection step.
+
+Awkward-shape sweeps run in interpret mode (the kernel body executes
+with the exact BlockSpec tiling the TPU target will use) and are
+checked against the pure-jnp oracles: ``ref.entropy_ref`` /
+``jnp.linalg.norm`` for the stats, ``ref.selection_step_ref`` for the
+fused pipeline.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import fused_row_stats, hics_selection_step, ref
+from repro.kernels.fused_stats import fused_stats_pallas
+from repro.kernels.pairwise import hics_selection_step_pallas
+
+# row block is 8, class block is 512 — shapes chosen to hit every
+# padding corner: N not a multiple of the row block, C below / exactly
+# at / above one class block, and the single-client edge
+AWKWARD = [
+    (13, 100),     # N % block_n != 0, C < one class block
+    (8, 512),      # C exactly one block
+    (5, 1000),     # C just under two blocks
+    (1, 32),       # single client
+    (9, 513),      # one element into the second class block
+]
+
+
+@pytest.mark.parametrize("n,c", AWKWARD)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_stats_awkward_shapes(rng, n, c, dtype):
+    x = jnp.asarray(rng.normal(size=(n, c)) * 0.02, dtype)
+    ent, norm, rms = fused_stats_pallas(x, 0.0025, interpret=True)
+    want_ent = ref.entropy_ref(x, 0.0025)
+    xf = x.astype(jnp.float32)
+    want_norm = jnp.linalg.norm(xf, axis=-1)
+    want_rms = jnp.sqrt(jnp.mean(jnp.square(xf), axis=-1))
+    tol = 1e-5 if dtype == jnp.float32 else 5e-3
+    np.testing.assert_allclose(np.asarray(ent), np.asarray(want_ent),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(norm), np.asarray(want_norm),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(rms), np.asarray(want_rms),
+                               atol=tol, rtol=tol)
+
+
+def test_fused_stats_block_invariance(rng):
+    """Result must not depend on the VMEM block size."""
+    x = jnp.asarray(rng.normal(size=(9, 3000)), jnp.float32)
+    want = fused_stats_pallas(x, 0.01, block_c=512, interpret=True)
+    for block_c in (128, 2048):
+        got = fused_stats_pallas(x, 0.01, block_c=block_c, interpret=True)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       atol=1e-4)
+
+
+def test_fused_stats_row_scale_matches_normalized_estimator(rng):
+    """scale = 1/RMS must reproduce the normalize=True estimator."""
+    x = jnp.asarray(rng.normal(size=(12, 700)) * 0.05, jnp.float32)
+    _, _, rms = fused_stats_pallas(x, 0.0025, interpret=True)
+    scale = 1.0 / jnp.clip(rms, 1e-12, None)
+    ent, _, _ = fused_stats_pallas(x, 0.0025, row_scale=scale,
+                                   interpret=True)
+    want = ref.entropy_ref(x / jnp.clip(rms[:, None], 1e-12, None),
+                           0.0025)
+    np.testing.assert_allclose(np.asarray(ent), np.asarray(want),
+                               atol=1e-4)
+
+
+def test_fused_stats_extreme_magnitudes(rng):
+    """Online softmax must survive values that overflow a naive exp."""
+    x = jnp.asarray(rng.normal(size=(4, 600)) * 500.0, jnp.float32)
+    ent, norm, _ = fused_stats_pallas(x, 0.0025, interpret=True)
+    assert np.all(np.isfinite(np.asarray(ent)))
+    np.testing.assert_allclose(
+        np.asarray(norm),
+        np.asarray(jnp.linalg.norm(x, axis=-1)), rtol=1e-5)
+
+
+def test_fused_stats_vocab_scale(rng):
+    """Acceptance shape: (64, 32768) vs the oracles, err < 1e-3."""
+    x = jnp.asarray(rng.normal(size=(64, 32_768)) * 0.01, jnp.float32)
+    ent, norm, rms = fused_stats_pallas(x, 0.0025, interpret=True)
+    assert float(jnp.max(jnp.abs(ent - ref.entropy_ref(x, 0.0025)))) \
+        < 1e-3
+    assert float(jnp.max(jnp.abs(
+        norm - jnp.linalg.norm(x, axis=-1)))) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# end-to-end selection step
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,c", [(5, 100), (13, 600), (32, 1024)])
+@pytest.mark.parametrize("normalize", [False, True])
+def test_selection_step_kernel_vs_oracle(rng, n, c, normalize):
+    x = jnp.asarray(rng.normal(size=(n, c)) * 0.02, jnp.float32)
+    ent, dist = hics_selection_step_pallas(x, 0.0025, lam=10.0,
+                                           normalize=normalize,
+                                           interpret=True)
+    want_ent, want_dist = ref.selection_step_ref(x, 0.0025, 10.0,
+                                                 normalize=normalize)
+    np.testing.assert_allclose(np.asarray(ent), np.asarray(want_ent),
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(dist), np.asarray(want_dist),
+                               atol=5e-3)
+    assert dist.shape == (n, n)
+    # Eq. 9 self-distance is exactly zero
+    np.testing.assert_allclose(np.asarray(jnp.diagonal(dist)), 0.0,
+                               atol=1e-6)
+
+
+def test_selection_step_bf16_gram(rng):
+    """bf16 Gram operands, f32 accumulation: looser but bounded."""
+    x = jnp.asarray(rng.normal(size=(24, 900)) * 0.02, jnp.float32)
+    _, dist = hics_selection_step_pallas(x, 0.0025, lam=10.0,
+                                         gram_in_bf16=True,
+                                         interpret=True)
+    _, want = ref.selection_step_ref(x, 0.0025, 10.0)
+    np.testing.assert_allclose(np.asarray(dist), np.asarray(want),
+                               atol=2e-2)
+
+
+def test_selection_step_dispatch_cpu(rng):
+    """ops-level dispatch on CPU (jitted oracle) matches eager ref."""
+    x = jnp.asarray(rng.normal(size=(10, 300)) * 0.02, jnp.float32)
+    ent, dist = hics_selection_step(x, 0.0025, lam=10.0,
+                                    use_pallas=False)
+    want_ent, want_dist = ref.selection_step_ref(x, 0.0025, 10.0)
+    np.testing.assert_allclose(np.asarray(ent), np.asarray(want_ent),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(dist), np.asarray(want_dist),
+                               atol=1e-4)
+    h, nrm, rms = fused_row_stats(x, 0.0025, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(want_ent),
+                               atol=1e-4)

@@ -23,14 +23,22 @@ N, K, T = 50, 5, 100
 REPO_ROOT = Path(__file__).resolve().parent.parent
 
 
-def _drive(sel, db, full, losses, rounds=8) -> float:
-    t0 = time.perf_counter()
-    for t in range(rounds):
+def _drive(sel, db, full, losses, rounds=8, warmup: int = 2) -> float:
+    """Steady-state s/round.  The shims jit their select/update
+    transitions per instance, so the first rounds pay one-off compile
+    time — warm them before starting the clock (Table 3 is about
+    per-round overhead, not compilation)."""
+    def one_round(t):
         ids = sel.select(t)
         sel.update(t, ids, bias_updates=db[ids],
                    full_updates=(full if "full_all" in sel.requires
                                  else full[ids]),
                    losses=losses)
+    for t in range(warmup):
+        one_round(t)
+    t0 = time.perf_counter()
+    for t in range(warmup, warmup + rounds):
+        one_round(t)
     return (time.perf_counter() - t0) / rounds
 
 

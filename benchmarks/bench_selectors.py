@@ -1,7 +1,9 @@
 """Paper Tables 1 + 2 analogue: final test accuracy and
 rounds-to-target-accuracy for all six selectors across the three
 multi-α heterogeneity settings, on the synthetic classification
-substitute (DESIGN.md §7).
+substitute (DESIGN.md §7) — plus the round-loop redesign benchmark
+(scanned ``jit_rounds=True`` vs the host loop), written to
+``BENCH_round_loop.json`` at the repo root.
 
 Settings mirror §4.1 (FMNIST block):
   (1) 80% severely imbalanced + 20% balanced        α={1e-3..1e-2, 0.5}
@@ -10,12 +12,18 @@ Settings mirror §4.1 (FMNIST block):
 """
 from __future__ import annotations
 
+import json
+import time
+from pathlib import Path
+
 import numpy as np
 
 from benchmarks.common import md_table, save_result, savitzky_golay
 from repro.data import SyntheticSpec
-from repro.fed import (ExperimentSpec, LocalSpec, rounds_to_accuracy,
-                       run_experiment)
+from repro.fed import (ExperimentSpec, LocalSpec, build,
+                       rounds_to_accuracy, run_experiment)
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
 
 SETTINGS = {
     "setting1": (0.001, 0.002, 0.005, 0.01, 0.5),
@@ -71,7 +79,48 @@ def run(rounds: int = 100, seeds=(0,), num_clients: int = 50,
     return results
 
 
+def bench_round_loop(ns=(64, 256, 512), rounds: int = 10,
+                     num_select: int = 8) -> dict:
+    """Rounds/sec of the scanned round loop vs the host loop (HiCS).
+
+    Each N gets a tiny per-client dataset so the comparison isolates
+    the round-loop machinery (selection, dispatch, host transfers)
+    rather than local-update FLOPs.  Compile time is excluded by
+    warming both paths with one full run before timing."""
+    out: dict = {}
+    for n in ns:
+        spec = ExperimentSpec(
+            arch="paper-mlp", num_clients=n, num_select=num_select,
+            rounds=rounds, alphas=(0.01, 0.5), selector="hics",
+            local=LocalSpec(algo="fedavg", optimizer="sgd", lr=0.05,
+                            epochs=1, batch_size=16),
+            samples_train=4 * n, samples_test=64, eval_every=10 ** 6,
+            seed=0)
+        res = {}
+        for label, jit_rounds in (("host", False), ("scan", True)):
+            server, _ = build(spec)
+            server.run(jit_rounds=jit_rounds)       # warm-up + compile
+            t0 = time.perf_counter()
+            server.run(jit_rounds=jit_rounds)
+            dt = time.perf_counter() - t0
+            res[f"{label}_rounds_per_s"] = rounds / dt
+        res["speedup"] = (res["scan_rounds_per_s"]
+                          / res["host_rounds_per_s"])
+        out[f"N={n}"] = res
+        print(f"  N={n:4d}  host={res['host_rounds_per_s']:7.1f} r/s  "
+              f"scan={res['scan_rounds_per_s']:7.1f} r/s  "
+              f"({res['speedup']:.2f}x)", flush=True)
+    return out
+
+
 def main(quick: bool = True):
+    print("== bench_round_loop (jitted scan vs host loop) ==", flush=True)
+    rl = bench_round_loop(ns=(64, 256, 512), rounds=10 if quick else 30)
+    save_result("round_loop", rl)
+    (REPO_ROOT / "BENCH_round_loop.json").write_text(
+        json.dumps(rl, indent=1))
+    print(f"  wrote {REPO_ROOT / 'BENCH_round_loop.json'}", flush=True)
+
     print("== bench_selectors (Tables 1+2 analogue) ==", flush=True)
     rounds = 60 if quick else 150
     seeds = (0,) if quick else (0, 1, 2)

@@ -6,8 +6,10 @@
   python -m benchmarks.run --only selectors,overhead
 
 The quick tier's ``overhead`` module also writes the fused-vs-unfused
-selection-step numbers to ``BENCH_selection.json`` at the repo root
-(the per-PR perf trajectory).
+selection-step numbers to ``BENCH_selection.json`` at the repo root,
+and ``selectors`` writes the scanned-vs-host round-loop numbers to
+``BENCH_round_loop.json`` (the per-PR perf trajectory; CI uploads both
+as artifacts — see .github/workflows/ci.yml).
 
 Modules:
   selectors  — Tables 1 + 2 (final acc, rounds-to-target, speedup) +

@@ -3,17 +3,21 @@
 Runs a 50-client federated classification experiment (the paper's
 FMNIST-style setting (1): 80% of clients severely imbalanced, 20%
 balanced) with HiCS-FL selection, then prints the estimated-vs-true
-entropy table and the accuracy trajectory vs random sampling.
+entropy table and the accuracy trajectory vs random sampling — and a
+short tour of the selector API's two faces (the OO shim and the
+functional ``(init, select, update)`` protocol).
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import label_entropy
+from repro.core import (Observations, label_entropy, make_functional,
+                        make_selector)
 from repro.data import SyntheticSpec
 from repro.fed import (ExperimentSpec, LocalSpec, build,
                        rounds_to_accuracy)
 
+import jax
 import jax.numpy as jnp
 
 ROUNDS = 40
@@ -62,6 +66,51 @@ def main():
                   f"({rr/rh:.1f}x speedup)")
     print(f"\nselection overhead: {server.selector.select_seconds*1e3:.1f} ms"
           f" total across {ROUNDS} rounds (O(C) server-side)")
+
+    selector_api_tour()
+
+
+def selector_api_tour():
+    """The selector API's two faces, on fake Δb observations.
+
+    1. The OO *shim* — the historical stateful interface.  Internally a
+       thin wrapper over the functional core; legacy keyword updates
+       still work.
+    2. The *functional protocol* — a pure ``(init, select, update)``
+       triple over an explicit ``SelectorState`` pytree.  Because both
+       transitions are pure and jit-compatible, ``FederatedServer``
+       can scan entire rounds (``jit_rounds=True`` /
+       ``ExperimentSpec(jit_rounds=True)``) with zero host transfers
+       between select and update, and sweeps vmap over stacked states.
+    """
+    print("\n=== selector API tour (N=12 clients, K=3) ===")
+    n, k, rounds = 12, 3, 10
+    dbs = np.random.default_rng(0).normal(0.0, 0.02, (n, 10))
+
+    # -- 1. the OO shim ---------------------------------------------------
+    sel = make_selector("hics", num_clients=n, num_select=k,
+                        total_rounds=rounds, temperature=0.0025, seed=7)
+    for t in range(5):
+        ids = sel.select(t)
+        sel.update(t, ids, bias_updates=dbs[ids])      # legacy kwargs
+    print("shim       :", ids, "<- sel.select(t) / sel.update(t, ids, ...)")
+
+    # -- 2. the functional protocol --------------------------------------
+    fn = make_functional("hics", num_clients=n, num_select=k,
+                         total_rounds=rounds, temperature=0.0025,
+                         num_classes=10)
+    state = fn.init(jax.random.PRNGKey(7))
+    key = jax.random.PRNGKey(0)
+    for t in range(5):
+        key, kt = jax.random.split(key)
+        ids, state = fn.select(state, t, kt)           # pure, jittable
+        state = fn.update(state, t, ids,
+                          Observations(bias_updates=jnp.asarray(dbs)[ids]))
+    print("functional :", [int(i) for i in ids],
+          "<- ids, state = fn.select(state, t, key)")
+    print("state pytree leaves:",
+          [tuple(l.shape) for l in jax.tree_util.tree_leaves(state)][:5],
+          "...")
 
 
 if __name__ == "__main__":

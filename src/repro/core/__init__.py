@@ -6,30 +6,43 @@
   sampling   — Eq. 10 two-stage annealed cluster/client sampler
   selectors  — HiCS-FL (Alg. 1) + 5 baselines behind one API
 """
-from repro.core.clustering import agglomerate, cluster_means
+from repro.core.clustering import (agglomerate, agglomerate_device,
+                                   cluster_means, cluster_means_device)
 from repro.core.distance import distance_matrix, pairwise_arccos
 from repro.core.hetero import (delta_b_from_head_delta,
                                dissimilarity_envelope,
                                entropy_separation_bound, estimate_entropy,
                                expected_bias_update, head_bias_update,
-                               head_bias_updates_stacked, label_entropy,
-                               softmax_entropy)
-from repro.core.sampling import (anneal, cluster_probs, hierarchical_sample,
-                                 sampling_probabilities)
-from repro.core.selectors import (SELECTORS, ClientSelector,
+                               head_bias_updates_stacked, head_num_classes,
+                               label_entropy, softmax_entropy)
+from repro.core.sampling import (anneal, anneal_device, cluster_probs,
+                                 coverage_sweep_device, gumbel_topk,
+                                 hierarchical_sample,
+                                 hierarchical_sample_device,
+                                 sampling_probabilities,
+                                 weighted_sample_device)
+from repro.core.selectors import (FUNCTIONAL, SELECTORS, ClientSelector,
                                   ClusteredSamplingSelector, DivFLSelector,
-                                  FedCorSelector, HiCSFLSelector,
+                                  FedCorSelector, FunctionalSelector,
+                                  HiCSFLSelector, Observations,
                                   PowerOfChoiceSelector, RandomSelector,
+                                  SelectorState, make_functional,
                                   make_selector)
 
 __all__ = [
-    "agglomerate", "cluster_means", "distance_matrix", "pairwise_arccos",
+    "agglomerate", "agglomerate_device", "cluster_means",
+    "cluster_means_device", "distance_matrix", "pairwise_arccos",
     "delta_b_from_head_delta", "dissimilarity_envelope",
     "entropy_separation_bound", "estimate_entropy", "expected_bias_update",
-    "head_bias_update", "head_bias_updates_stacked", "label_entropy",
-    "softmax_entropy", "anneal",
-    "cluster_probs", "hierarchical_sample", "sampling_probabilities",
-    "SELECTORS", "ClientSelector", "ClusteredSamplingSelector",
-    "DivFLSelector", "FedCorSelector", "HiCSFLSelector",
-    "PowerOfChoiceSelector", "RandomSelector", "make_selector",
+    "head_bias_update", "head_bias_updates_stacked", "head_num_classes",
+    "label_entropy",
+    "softmax_entropy", "anneal", "anneal_device",
+    "cluster_probs", "coverage_sweep_device", "gumbel_topk",
+    "hierarchical_sample", "hierarchical_sample_device",
+    "sampling_probabilities", "weighted_sample_device",
+    "FUNCTIONAL", "SELECTORS", "ClientSelector",
+    "ClusteredSamplingSelector", "DivFLSelector", "FedCorSelector",
+    "FunctionalSelector", "HiCSFLSelector", "Observations",
+    "PowerOfChoiceSelector", "RandomSelector", "SelectorState",
+    "make_functional", "make_selector",
 ]

@@ -23,6 +23,8 @@ from __future__ import annotations
 
 from typing import Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 _LINKAGES = ("ward", "average", "complete", "single")
@@ -126,6 +128,72 @@ def agglomerate(dist: np.ndarray, num_clusters: int,
             uniq[lab] = len(uniq)
         out[k] = uniq[lab]
     return out
+
+
+def agglomerate_device(dist: jnp.ndarray, num_clusters: int,
+                       linkage: str = "ward") -> jnp.ndarray:
+    """Pure-jax agglomerative clustering — jit/scan/vmap-compatible.
+
+    Same Lance–Williams semantics as :func:`agglomerate` (ward on
+    squared distances, naive flat-argmin merge order, first-appearance
+    relabelling) but with fixed shapes: N − M merges unrolled in a
+    ``fori_loop``, retired rows parked at +inf.  Because merges always
+    absorb the higher index into the lower, each surviving
+    representative r first appears in the label vector at position r —
+    so first-appearance relabelling is exactly the rank of r among the
+    sorted representatives, which ``unique(size=M)`` + ``searchsorted``
+    computes with static shapes.  O(N³) worst case versus the numpy
+    version's amortized O(N²), but it runs on-device inside the jitted
+    round loop (N ≤ a few thousand in any selection scenario).
+    """
+    if linkage not in _LINKAGES:
+        raise ValueError(f"linkage must be one of {_LINKAGES}")
+    n = dist.shape[0]
+    num_clusters = max(1, min(int(num_clusters), n))
+    d = jnp.asarray(dist, jnp.float32)
+    d = 0.5 * (d + d.T)
+    if linkage == "ward":
+        d = d * d
+    d = jnp.where(jnp.eye(n, dtype=bool), jnp.inf, d)
+
+    def body(_, carry):
+        d, sizes, labels = carry
+        flat = jnp.argmin(d)                 # row-major ⇒ i < j
+        i, j = flat // n, flat % n
+        dij = d[i, j]
+        ni, nj = sizes[i], sizes[j]
+        di, dj = d[i], d[j]
+        if linkage == "ward":
+            new = ((ni + sizes) * di + (nj + sizes) * dj
+                   - sizes * dij) / (ni + nj + sizes)
+        elif linkage == "average":
+            new = (ni * di + nj * dj) / (ni + nj)
+        elif linkage == "complete":
+            new = jnp.maximum(di, dj)
+        else:  # single
+            new = jnp.minimum(di, dj)
+        new = new.at[i].set(jnp.inf).at[j].set(jnp.inf)
+        d = d.at[i, :].set(new).at[:, i].set(new)
+        d = d.at[j, :].set(jnp.inf).at[:, j].set(jnp.inf)
+        sizes = sizes.at[i].set(ni + nj).at[j].set(0.0)
+        labels = jnp.where(labels == j, i, labels)
+        return d, sizes, labels
+
+    _, _, labels = jax.lax.fori_loop(
+        0, n - num_clusters, body,
+        (d, jnp.ones(n, jnp.float32), jnp.arange(n)))
+    reps = jnp.unique(labels, size=num_clusters)
+    return jnp.searchsorted(reps, labels).astype(jnp.int32)
+
+
+def cluster_means_device(values: jnp.ndarray, labels: jnp.ndarray,
+                         num_clusters: int) -> jnp.ndarray:
+    """Per-cluster mean via ``segment_sum`` (device analogue of
+    :func:`cluster_means`; empty clusters get 0)."""
+    s = jax.ops.segment_sum(values, labels, num_segments=num_clusters)
+    c = jax.ops.segment_sum(jnp.ones_like(values), labels,
+                            num_segments=num_clusters)
+    return jnp.where(c > 0, s / jnp.maximum(c, 1.0), 0.0)
 
 
 def cluster_means(values: np.ndarray, labels: np.ndarray,

@@ -148,6 +148,20 @@ def head_bias_updates_stacked(params_before, stacked_after,
     return None
 
 
+def head_num_classes(params, bias_path: str = "lm_head/b") -> Optional[int]:
+    """Class-axis width C the head's Δb (or ΔW surrogate) will have —
+    lets the server size the selector's device-resident Δb buffer at
+    init instead of on first observation.  None when the model has no
+    recognizable head."""
+    flat = dict(_flatten(params))
+    if bias_path in flat:
+        return int(flat[bias_path].shape[-1])
+    wpath = bias_path.rsplit("/", 1)[0] + "/w"
+    if wpath in flat:
+        return int(flat[wpath].shape[-1])
+    return None
+
+
 def _flatten(tree):
     out = []
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:

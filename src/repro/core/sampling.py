@@ -11,11 +11,24 @@ Stage 2 — pick a client k inside the cluster with probability
 Selection of K clients repeats the two stages without replacement
 (a drawn client is removed; an emptied cluster is renormalized away),
 matching Algorithm 1's `while |S^t| < K` loop.
+
+Two implementations live here:
+
+  * numpy (``hierarchical_sample``, ``anneal``, ...) — the original
+    host-side reference, kept for analysis helpers and benchmarks;
+  * device (``*_device``) — pure-jax Gumbel formulations used by the
+    functional selector protocol (``repro.core.selectors.functional``)
+    so the entire select step stays jit/scan/vmap-compatible.  Sampling
+    K items without replacement with probs ∝ w is realized as Gumbel
+    top-K over log w (successive-sampling equivalence); the two-stage
+    scheme draws one Gumbel argmax per stage inside a ``fori_loop``.
 """
 from __future__ import annotations
 
 from typing import List, Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -65,6 +78,82 @@ def hierarchical_sample(rng: np.random.Generator,
                                                         1.0 / len(cand))
         pick = int(rng.choice(len(cand), p=pw))
         chosen.append(cand.pop(pick))
+    return chosen
+
+
+# ---------------------------------------------------------------------------
+# Device-side (pure jax) variants for the jitted selection path
+# ---------------------------------------------------------------------------
+
+_NEG_LOG_FLOOR = 1e-30   # log-clip so zero weights become ~ -inf, not nan
+
+
+def anneal_device(gamma0, t, total_rounds):
+    """γ^t = γ⁰ (1 − t/T), traced-``t`` version of :func:`anneal`."""
+    return gamma0 * jnp.maximum(0.0, 1.0 - t / jnp.maximum(1.0, total_rounds))
+
+
+def gumbel_topk(key: jax.Array, logits: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Top-K of ``logits + Gumbel noise`` — i.e. K draws without
+    replacement with P(i first) ∝ exp(logits_i)."""
+    g = jax.random.gumbel(key, logits.shape, dtype=logits.dtype)
+    return jax.lax.top_k(logits + g, k)[1]
+
+
+def weighted_sample_device(key: jax.Array, weights: jnp.ndarray,
+                           k: int) -> jnp.ndarray:
+    """min(K, N) distinct indices ∝ weights (Gumbel top-K over log w)."""
+    logw = jnp.log(jnp.clip(weights, _NEG_LOG_FLOOR, None))
+    return gumbel_topk(key, logw.astype(jnp.float32),
+                       min(k, weights.shape[-1]))
+
+
+def coverage_sweep_device(key: jax.Array, seen: jnp.ndarray,
+                          k: int) -> jnp.ndarray:
+    """min(K, N) distinct indices, uniformly among unseen clients first
+    (Alg. 1 lines 14-15), topping up uniformly from the seen pool if
+    fewer than K remain unseen."""
+    g = jax.random.gumbel(key, seen.shape, dtype=jnp.float32)
+    return jax.lax.top_k(g + jnp.where(seen, 0.0, 1e6),
+                         min(k, seen.shape[-1]))[1]
+
+
+def hierarchical_sample_device(key: jax.Array, labels: jnp.ndarray,
+                               mean_entropies: jnp.ndarray,
+                               weights: jnp.ndarray, k: int,
+                               gamma_t) -> jnp.ndarray:
+    """Pure-jax two-stage sampler (Eq. 10), K sequential two-stage draws
+    without replacement inside a ``fori_loop``.
+
+    Stage 1 is a Gumbel argmax over γ^t·H̄ restricted to clusters that
+    still have available clients (argmax is invariant to the softmax
+    normalization, so the restriction IS the renormalization the numpy
+    version performs).  Stage 2 is a Gumbel argmax over log p_k within
+    the chosen cluster.  Distributionally identical to
+    :func:`hierarchical_sample`, including the k = min(k, N) clamp.
+    """
+    n = labels.shape[0]
+    k = min(k, n)
+    m = mean_entropies.shape[0]
+    logw = jnp.log(jnp.clip(weights, _NEG_LOG_FLOOR, None)
+                   ).astype(jnp.float32)
+    ent = jnp.asarray(mean_entropies, jnp.float32)
+
+    def body(i, carry):
+        avail, chosen, key = carry
+        key, kc, kj = jax.random.split(key, 3)
+        live = jax.ops.segment_sum(avail.astype(jnp.float32), labels,
+                                   num_segments=m) > 0
+        clogit = jnp.where(live, gamma_t * ent, -jnp.inf)
+        c = jnp.argmax(clogit + jax.random.gumbel(kc, (m,), jnp.float32))
+        jlogit = jnp.where((labels == c) & avail, logw, -jnp.inf)
+        j = jnp.argmax(jlogit + jax.random.gumbel(kj, (n,), jnp.float32))
+        return avail.at[j].set(False), chosen.at[i].set(j), key
+
+    avail0 = jnp.ones(n, bool)
+    chosen0 = jnp.zeros(k, jnp.int32)
+    _, chosen, _ = jax.lax.fori_loop(
+        0, k, body, (avail0, chosen0, key))
     return chosen
 
 

@@ -1,0 +1,73 @@
+"""Client selectors: HiCS-FL (Algorithm 1) + the paper's five baselines.
+
+Two equivalent API surfaces over one functional core:
+
+**Functional protocol** (``functional.py``) — each selector is an
+``(init, select, update)`` triple over an explicit, device-resident
+:class:`SelectorState` pytree:
+
+    fn = make_functional("hics", num_clients=N, num_select=K,
+                         total_rounds=T, weights=p)
+    state = fn.init(jax.random.PRNGKey(0))
+    ids, state = fn.select(state, t, key)          # pure, jit-compatible
+    state = fn.update(state, t, ids, Observations(bias_updates=dbs))
+
+``select``/``update`` are pure and jit/scan/vmap-compatible, so
+``FederatedServer(jit_rounds=True)`` runs whole rounds — select →
+vmapped local update → aggregate → stacked Δb → selector update — as
+one scanned ``round_step`` with zero host transfers, and multi-seed
+experiment sweeps batch as one ``vmap`` over stacked states.
+:class:`Observations` is the typed container the server produces
+on-device each round (replacing the old ``bias_updates=/full_updates=/
+losses=`` kwarg soup).
+
+**OO shims** (``base.py`` + per-selector classes) — the historical
+stateful API, now thin wrappers holding the state pytree and a PRNG
+key:
+
+    sel = make_selector("hics", num_clients=N, num_select=K,
+                        total_rounds=T, weights=p)
+    ids = sel.select(t)
+    sel.update(t, ids, bias_updates=...)           # legacy kwargs ok
+
+``requires`` declares what the server must compute per round — the
+bookkeeping behind the Table 3 overhead comparison:
+
+    random   : nothing
+    pow-d    : losses of ALL clients (ideal setting, App. A.1.2)
+    cs       : full model updates of participants  (O(|θ|) clustering)
+    divfl    : full model updates of ALL clients   (ideal setting)
+    fedcor   : losses of ALL clients in the warm-up stage (GP fit)
+    hics     : bias updates of participants        (O(C) — the paper)
+
+HiCS-FL's O(C) hot path (entropy + norms + pairwise Eq. 9) is one
+fused, jitted selection step (``repro.kernels.hics_selection_step``) —
+a single pre-Gram HBM sweep over (N, C), Pallas on TPU — followed by
+on-device clustering (``agglomerate_device``) and Gumbel two-stage
+sampling (``hierarchical_sample_device``).
+"""
+from repro.core.selectors.base import ClientSelector
+from repro.core.selectors.baselines import (ClusteredSamplingSelector,
+                                            DivFLSelector, FedCorSelector,
+                                            PowerOfChoiceSelector,
+                                            RandomSelector, cs_functional,
+                                            divfl_functional,
+                                            fedcor_functional,
+                                            powd_functional,
+                                            random_functional)
+from repro.core.selectors.functional import (FunctionalSelector,
+                                             Observations, SelectorState,
+                                             init_state)
+from repro.core.selectors.hics import HiCSFLSelector, hics_functional
+from repro.core.selectors.registry import (FUNCTIONAL, SELECTORS,
+                                           make_functional, make_selector)
+
+__all__ = [
+    "ClientSelector", "ClusteredSamplingSelector", "DivFLSelector",
+    "FedCorSelector", "HiCSFLSelector", "PowerOfChoiceSelector",
+    "RandomSelector", "FunctionalSelector", "Observations",
+    "SelectorState", "init_state", "FUNCTIONAL", "SELECTORS",
+    "make_functional", "make_selector", "hics_functional",
+    "random_functional", "powd_functional", "cs_functional",
+    "divfl_functional", "fedcor_functional",
+]

@@ -1,0 +1,126 @@
+"""OO shim layer: the legacy ``ClientSelector`` API over the
+functional core.
+
+Every selector class is now a thin stateful wrapper around its
+:class:`~repro.core.selectors.functional.FunctionalSelector` triple:
+``select``/``update`` keep their historical signatures (including the
+``bias_updates=/full_updates=/losses=`` kwargs, now folded into an
+:class:`Observations`), the wrapper owns the ``SelectorState`` pytree
+and a PRNG key, and the transitions are jitted once per shape.  Callers
+that migrate can reach the functional core directly via ``sel.fn`` /
+``sel.state`` — or skip the class entirely with
+``repro.core.make_functional``.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.selectors.functional import (FunctionalSelector,
+                                             Observations, SelectorState)
+
+
+class ClientSelector:
+    """Stateful shim; subclasses plug in a functional factory.
+
+    ``requires`` declares what the server must compute for the selector
+    each round — the bookkeeping behind the Table 3 overhead
+    comparison: subset of {"loss_all", "full_all", "full_sel",
+    "bias_sel"}.
+    """
+
+    name = "base"
+    requires: frozenset = frozenset()
+
+    def __init__(self, num_clients: int, num_select: int, total_rounds: int,
+                 weights: Optional[Sequence[float]] = None, seed: int = 0,
+                 **kw):
+        self.n = int(num_clients)
+        self.k = int(num_select)
+        self.total_rounds = int(total_rounds)
+        w = np.ones(self.n) if weights is None else np.asarray(
+            weights, dtype=np.float64)
+        self.weights = w / w.sum()
+        self.fn: FunctionalSelector = self._make_functional(
+            num_clients=self.n, num_select=self.k,
+            total_rounds=self.total_rounds, weights=self.weights, **kw)
+        self._key = jax.random.PRNGKey(int(seed))
+        self._key, k0 = jax.random.split(self._key)
+        self.state: SelectorState = self.fn.init(k0)
+        self._select_jit = jax.jit(self.fn.select)
+        self._update_jit = jax.jit(self.fn.update)
+        self.select_seconds = 0.0      # cumulative selection compute time
+        self.update_seconds = 0.0
+
+    # -- functional factory (override) ---------------------------------------
+    def _make_functional(self, **kw) -> FunctionalSelector:
+        raise NotImplementedError
+
+    # -- public API ---------------------------------------------------------
+    def select(self, t: int, key: Optional[jax.Array] = None) -> List[int]:
+        """Round t's participant set.  ``key`` overrides the shim's own
+        PRNG stream (the server passes the round key so the host loop
+        and the scanned loop draw identically)."""
+        t0 = time.perf_counter()
+        if key is None:
+            self._key, key = jax.random.split(self._key)
+        ids, self.state = self._select_jit(self.state, t, key)
+        out = [int(i) for i in np.asarray(ids)]
+        self.select_seconds += time.perf_counter() - t0
+        return out
+
+    def update(self, t: int, selected: Sequence[int],
+               observations: Optional[Observations] = None, *,
+               bias_updates=None, full_updates=None, losses=None) -> None:
+        t0 = time.perf_counter()
+        req = self.fn.requires
+        if observations is not None:
+            obs = observations
+        else:
+            # only materialize the fields this selector's `requires`
+            # declares — callers hand every kwarg to every selector,
+            # and converting an ignored (K, |θ|) array would dominate
+            # the very overhead Table 3 measures
+            obs = Observations(
+                bias_updates=jnp.asarray(bias_updates, jnp.float32)
+                if bias_updates is not None and "bias_sel" in req
+                else None,
+                full_updates=jnp.asarray(full_updates, jnp.float32)
+                if full_updates is not None
+                and req & {"full_all", "full_sel"} else None,
+                losses=jnp.asarray(losses, jnp.float32)
+                if losses is not None and "loss_all" in req else None)
+        ids = jnp.asarray(list(selected), jnp.int32)
+        self.state = self._ensure_dims(self.state, obs)
+        self.state = self._update_jit(self.state, t, ids, obs)
+        self.update_seconds += time.perf_counter() - t0
+
+    # -- helpers -------------------------------------------------------------
+    def _ensure_dims(self, state: SelectorState,
+                     obs: Observations) -> SelectorState:
+        """Grow zero-width state buffers to the observed feature widths
+        (standalone use — the server sizes them at init).  Only buffers
+        this selector's ``requires`` actually reads are grown; an
+        unused (N, |θ|) buffer would otherwise ride the state pytree
+        through every jitted transition."""
+        req = self.fn.requires
+        if (obs.bias_updates is not None and "bias_sel" in req
+                and state.delta_b.shape[1] != obs.bias_updates.shape[-1]):
+            state = state._replace(delta_b=jnp.zeros(
+                (self.n, obs.bias_updates.shape[-1]), jnp.float32))
+        if (obs.full_updates is not None
+                and req & {"full_all", "full_sel"}
+                and state.feats.shape[1] != obs.full_updates.shape[-1]):
+            state = state._replace(feats=jnp.zeros(
+                (self.n, obs.full_updates.shape[-1]), jnp.float32))
+        return state
+
+    def estimated_entropies(self) -> Optional[np.ndarray]:
+        """Latest Ĥ per client, or None before any Δb was observed."""
+        if self.fn.entropies is None or int(self.state.hist_count) == 0:
+            return None
+        return np.asarray(self.fn.entropies(self.state))

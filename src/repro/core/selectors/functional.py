@@ -1,0 +1,119 @@
+"""The functional selector protocol: pytree state, pure transitions.
+
+A selector is a ``FunctionalSelector`` triple
+
+    state = fn.init(key)                       # SelectorState pytree
+    ids, state = fn.select(state, t, key)      # pure, jit-compatible
+    state = fn.update(state, t, ids, obs)      # pure, jit-compatible
+
+operating on an explicit :class:`SelectorState` pytree.  Every field is
+a device array, so a whole federated round (select → vmapped local
+update → aggregate → stacked Δb → selector update) jits into one
+``round_step`` that ``FederatedServer`` can drive through ``lax.scan``
+with zero host transfers — and whole experiments (multi-seed sweeps)
+become one ``vmap`` over stacked states.
+
+:class:`Observations` replaces the legacy ``bias_updates=/
+full_updates=/losses=`` kwarg soup: the server produces it on-device
+and ``update`` consumes whichever fields the selector's ``requires``
+declares.  Unused fields stay ``None`` (an empty pytree — the
+structure is static per trace).
+
+Shape/staticness contract: client count N, cohort size K, cluster
+count M, and the feature widths C/P are fixed at construction
+(closures of the triple); hyper-parameters that only scale arithmetic
+(γ⁰, T, λ) are plain floats baked into the closure.  The state carries
+only per-experiment *data* — Δb buffer, seen-mask/coverage pool,
+feature buffer, loss history ring, client weights, PRNG key — which is
+exactly what varies across the experiments a ``vmap`` batches.
+"""
+from __future__ import annotations
+
+from typing import Callable, FrozenSet, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Observations(NamedTuple):
+    """What the server computed for the selector this round.
+
+    bias_updates : (K, C) Δb (or bias-free ΔW surrogate) of the round's
+                   participants, row-aligned with ``ids`` — HiCS-FL.
+    full_updates : (K, P) or (N, P) flattened model updates — CS/DivFL.
+    losses       : (N,) current global-model loss per client — pow-d,
+                   FedCor.
+    """
+    bias_updates: Optional[jnp.ndarray] = None
+    full_updates: Optional[jnp.ndarray] = None
+    losses: Optional[jnp.ndarray] = None
+
+
+class SelectorState(NamedTuple):
+    """One pytree carrying every selector's round-to-round data.
+
+    Selectors use the subset of fields they need; unused array fields
+    are allocated with a zero-width trailing axis so the pytree
+    structure is uniform and cheap.  The coverage pool is represented
+    as (seen mask, unseen count) — an O(N) packed form equivalent to an
+    explicit shrinking id list, but scatter/reduce-friendly under jit.
+    """
+    key: jax.Array            # PRNG key (used when select gets key=None)
+    weights: jnp.ndarray      # (N,) normalized p_k
+    seen: jnp.ndarray         # (N,) bool — coverage pool complement
+    unseen_count: jnp.ndarray  # () int32
+    delta_b: jnp.ndarray      # (N, C) device-resident Δb buffer
+    feats: jnp.ndarray        # (N, P) full-update buffer
+    losses: jnp.ndarray       # (N,) latest loss poll
+    loss_hist: jnp.ndarray    # (H, N) loss-history ring (newest last)
+    hist_count: jnp.ndarray   # () int32 — observations received
+
+
+class FunctionalSelector(NamedTuple):
+    """(init, select, update) + metadata; see the module docstring."""
+    name: str
+    requires: FrozenSet[str]
+    init: Callable[[jax.Array], SelectorState]
+    select: Callable[..., tuple]     # (state, t, key=None) -> (ids, state)
+    update: Callable[..., SelectorState]  # (state, t, ids, obs) -> state
+    jit_capable: bool = True
+    #: optional (state) -> (N,) Ĥ, for history recording inside the scan
+    entropies: Optional[Callable[[SelectorState], jnp.ndarray]] = None
+
+
+def init_state(key: jax.Array, num_clients: int, weights=None,
+               num_classes: int = 0, feat_dim: int = 0,
+               hist_len: int = 0) -> SelectorState:
+    """Allocate a fresh :class:`SelectorState` with the given widths."""
+    n = int(num_clients)
+    w = (jnp.ones(n, jnp.float32) if weights is None
+         else jnp.asarray(weights, jnp.float32))
+    w = w / jnp.sum(w)
+    return SelectorState(
+        key=key,
+        weights=w,
+        seen=jnp.zeros(n, bool),
+        unseen_count=jnp.int32(n),
+        delta_b=jnp.zeros((n, int(num_classes)), jnp.float32),
+        feats=jnp.zeros((n, int(feat_dim)), jnp.float32),
+        losses=jnp.zeros(n, jnp.float32),
+        loss_hist=jnp.zeros((int(hist_len), n), jnp.float32),
+        hist_count=jnp.int32(0),
+    )
+
+
+def take_key(state: SelectorState, key: Optional[jax.Array]):
+    """Resolve select()'s key argument: an explicit key leaves the
+    state's own key untouched (scan path — the server supplies the
+    round's key); ``None`` splits the state key (standalone use)."""
+    if key is None:
+        new_key, sub = jax.random.split(state.key)
+        return state._replace(key=new_key), sub
+    return state, key
+
+
+def mark_seen(state: SelectorState, ids: jnp.ndarray) -> SelectorState:
+    """Fold ``ids`` into the coverage pool (idempotent)."""
+    seen = state.seen.at[ids].set(True)
+    return state._replace(
+        seen=seen, unseen_count=jnp.sum(~seen).astype(jnp.int32))

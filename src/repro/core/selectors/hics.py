@@ -1,0 +1,104 @@
+"""HiCS-FL (Algorithm 1) as a functional triple + its OO shim.
+
+Rounds with a non-empty coverage pool: random sweep without
+replacement (S₀, Alg. 1 lines 14-15).  Afterwards: one fused device
+step (``repro.kernels.hics_selection_step``) produces Ĥ and the Eq. 9
+distance in a single pre-Gram HBM sweep over (N, C); agglomerative
+clustering into M = K groups and the two-stage Eq. 10 sampler then run
+on-device too (``agglomerate_device`` / ``hierarchical_sample_device``)
+so ``select`` is one jit-compatible function with no host round trip —
+the piece that makes the fully-scanned server round loop possible.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.clustering import agglomerate_device, cluster_means_device
+from repro.core.hetero import estimate_entropy
+from repro.core.sampling import (anneal_device, coverage_sweep_device,
+                                 hierarchical_sample_device)
+from repro.core.selectors.base import ClientSelector
+from repro.core.selectors.functional import (FunctionalSelector,
+                                             Observations, SelectorState,
+                                             init_state, mark_seen, take_key)
+from repro.kernels import hics_selection_step
+
+REQUIRES = frozenset({"bias_sel"})
+
+
+def hics_functional(num_clients: int, num_select: int, total_rounds: int,
+                    weights=None, temperature: float = 0.0025,
+                    lam: float = 10.0, gamma0: float = 4.0,
+                    num_clusters: Optional[int] = None,
+                    linkage: str = "ward", normalize: bool = False,
+                    gram_in_bf16: bool = False, num_classes: int = 1,
+                    **_kw) -> FunctionalSelector:
+    n = int(num_clients)
+    k = min(int(num_select), n)
+    m = int(num_clusters) if num_clusters else k
+    temperature = float(temperature)
+    lam, gamma0 = float(lam), float(gamma0)
+    tr = float(total_rounds)
+    num_classes = max(1, int(num_classes))
+
+    def init(key) -> SelectorState:
+        return init_state(key, n, weights, num_classes=num_classes)
+
+    def select(state: SelectorState, t, key=None):
+        state, key = take_key(state, key)
+
+        def sweep(key):
+            ids = coverage_sweep_device(key, state.seen, k)
+            return ids, state.seen.at[ids].set(True)
+
+        def clustered(key):
+            ent, dist = hics_selection_step(
+                state.delta_b, temperature, lam=lam,
+                normalize=normalize, gram_in_bf16=gram_in_bf16)
+            labels = agglomerate_device(dist, m, linkage=linkage)
+            means = cluster_means_device(ent, labels, m)
+            gamma_t = anneal_device(gamma0, t, tr)
+            ids = hierarchical_sample_device(
+                key, labels, means, state.weights, k, gamma_t)
+            return ids, state.seen
+
+        ids, seen = jax.lax.cond(state.unseen_count > 0, sweep,
+                                 clustered, key)
+        state = state._replace(
+            seen=seen, unseen_count=jnp.sum(~seen).astype(jnp.int32))
+        return ids, state
+
+    def update(state: SelectorState, t, ids, obs: Observations
+               ) -> SelectorState:
+        if obs.bias_updates is None:
+            return state
+        db = state.delta_b.at[ids].set(          # Alg. 1 line 17: replace
+            jnp.asarray(obs.bias_updates, state.delta_b.dtype))
+        state = mark_seen(state._replace(
+            delta_b=db, hist_count=state.hist_count + 1), ids)
+        return state
+
+    def entropies(state: SelectorState) -> jnp.ndarray:
+        return estimate_entropy(state.delta_b, temperature,
+                                normalize=normalize)
+
+    return FunctionalSelector("hics", REQUIRES, init, select, update,
+                              jit_capable=True, entropies=entropies)
+
+
+class HiCSFLSelector(ClientSelector):
+    """Algorithm 1 — thin shim over :func:`hics_functional`."""
+
+    name = "hics"
+    requires = REQUIRES
+
+    def _make_functional(self, **kw) -> FunctionalSelector:
+        return hics_functional(**kw)
+
+    @property
+    def _delta_b(self) -> jnp.ndarray:
+        """Back-compat view of the device-resident Δb buffer (N, C)."""
+        return self.state.delta_b

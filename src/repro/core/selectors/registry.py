@@ -1,0 +1,70 @@
+"""Selector registries: OO shim classes and functional factories.
+
+    sel = make_selector("hics", num_clients=N, num_select=K,
+                        total_rounds=T, weights=p, temperature=T_soft)
+    ids = sel.select(t)
+    sel.update(t, ids, bias_updates=...)
+
+    fn = make_functional("hics", num_clients=N, num_select=K,
+                         total_rounds=T, weights=p, temperature=T_soft)
+    state = fn.init(jax.random.PRNGKey(0))
+    ids, state = fn.select(state, t, key)
+    state = fn.update(state, t, ids, Observations(bias_updates=...))
+
+Both registries accept a uniform kwarg surface — unknown hyper-kwargs
+are ignored by selectors that don't use them, so callers can pass one
+kwargs dict for any selector name.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.core.selectors.base import ClientSelector
+from repro.core.selectors.baselines import (ClusteredSamplingSelector,
+                                            DivFLSelector, FedCorSelector,
+                                            PowerOfChoiceSelector,
+                                            RandomSelector, cs_functional,
+                                            divfl_functional,
+                                            fedcor_functional,
+                                            powd_functional,
+                                            random_functional)
+from repro.core.selectors.functional import FunctionalSelector
+from repro.core.selectors.hics import HiCSFLSelector, hics_functional
+
+SELECTORS: Dict[str, type] = {
+    "random": RandomSelector,
+    "pow-d": PowerOfChoiceSelector,
+    "cs": ClusteredSamplingSelector,
+    "divfl": DivFLSelector,
+    "fedcor": FedCorSelector,
+    "hics": HiCSFLSelector,
+}
+
+FUNCTIONAL: Dict[str, Callable[..., FunctionalSelector]] = {
+    "random": random_functional,
+    "pow-d": powd_functional,
+    "cs": cs_functional,
+    "divfl": divfl_functional,
+    "fedcor": fedcor_functional,
+    "hics": hics_functional,
+}
+
+
+def make_selector(name: str, **kw) -> ClientSelector:
+    """Build an OO shim selector by name."""
+    try:
+        cls = SELECTORS[name]
+    except KeyError:
+        raise KeyError(f"unknown selector {name!r}; known: "
+                       f"{sorted(SELECTORS)}") from None
+    return cls(**kw)
+
+
+def make_functional(name: str, **kw) -> FunctionalSelector:
+    """Build a functional (init, select, update) triple by name."""
+    try:
+        factory = FUNCTIONAL[name]
+    except KeyError:
+        raise KeyError(f"unknown selector {name!r}; known: "
+                       f"{sorted(FUNCTIONAL)}") from None
+    return factory(**kw)

@@ -2,14 +2,25 @@
 selection, for any (init, apply[, features]) model triple.
 
 Per round t:
-  1. S^t ← selector.select(t)
+  1. S^t ← select (functional core: ids, state = fn.select(state, t, key))
   2. whatever the selector requires is computed server-side:
        loss_all  — global-model loss on every client's data (pow-d, FedCor
                    ideal setting); one vmapped forward
        full_all  — 1-step gradient from every client (DivFL ideal setting)
   3. LocalUpdate for the selected clients (one vmapped jit'd cohort step)
   4. θ^{t+1} ← (1/K) Σ_{k∈S^t} θ_k^t   (unbiased-sampling aggregation)
-  5. Δb^{(k)} extracted from the head for k ∈ S^t; selector.update(...)
+  5. Δb^{(k)} stacked from the head; state = fn.update(state, t, ids, obs)
+
+Two drivers over the same functional selector core:
+
+  * ``run()`` (host loop) — one Python iteration per round; the
+    selector shim executes the jitted select/update transitions.
+  * ``run(jit_rounds=True)`` — the whole round is ONE jitted
+    ``round_step`` (select → vmapped local update → aggregate → stacked
+    Δb → selector update) driven through ``lax.scan`` in
+    ``eval_every``-sized segments: zero device→host→device transfers
+    between ``select`` and ``update``.  Both paths consume the same
+    PRNG-key chain, so they produce identical participant sets.
 
 History records per-round train loss / selected ids / Δb-derived
 entropies and periodic test accuracy — everything the paper's
@@ -19,15 +30,20 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import head_bias_updates_stacked, make_selector
+from repro.core import (SELECTORS, Observations, head_bias_updates_stacked,
+                        make_selector)
+from repro.core.hetero import head_num_classes
 from repro.fed.client import (LocalSpec, init_extra, make_eval_fn,
                               make_local_update)
+
+#: requirements the scanned round loop can satisfy on-device
+_SCANNABLE = frozenset({"bias_sel", "loss_all"})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +58,7 @@ class FedConfig:
     seed: int = 0
     lr_decay_every: int = 10     # paper: lr halves every 10 rounds
     lr_decay: float = 0.5
+    jit_rounds: bool = False     # scan whole rounds instead of host loop
 
 
 def _tree_stack_gather(stacked, ids):
@@ -79,6 +96,17 @@ class FederatedServer:
         # client weights p_k ∝ |B_k|
         sizes = np.asarray(client_mask.sum(axis=1))
         kw = dict(cfg.selector_kw or {})
+        # size the selector's device buffers up-front so the state
+        # pytree never changes shape (scan-carry requirement)
+        if cfg.selector not in SELECTORS:
+            raise KeyError(f"unknown selector {cfg.selector!r}; known: "
+                           f"{sorted(SELECTORS)}")
+        requires = SELECTORS[cfg.selector].requires
+        if "bias_sel" in requires:
+            kw.setdefault("num_classes", head_num_classes(self.params) or 1)
+        if requires & {"full_all", "full_sel"}:
+            kw.setdefault("feat_dim", sum(
+                x.size for x in jax.tree_util.tree_leaves(self.params)))
         self.selector = make_selector(
             cfg.selector, num_clients=cfg.num_clients,
             num_select=cfg.num_select, total_rounds=cfg.rounds,
@@ -106,6 +134,8 @@ class FederatedServer:
                     jax.tree_util.tree_map(
                         lambda a, b: a - b, lu1(p, {}, x, y, m, r)[0], p)),
                 in_axes=(None, 0, 0, 0, 0)))
+        self._round_step: Optional[Callable] = None
+        self._scan_jit: Optional[Callable] = None
         self.history: Dict[str, list] = {
             "round": [], "train_loss": [], "selected": [],
             "test_round": [], "test_loss": [], "test_acc": [],
@@ -113,18 +143,23 @@ class FederatedServer:
         }
 
     # ------------------------------------------------------------------
-    def run(self, progress: bool = False) -> Dict[str, list]:
+    def run(self, progress: bool = False,
+            jit_rounds: Optional[bool] = None) -> Dict[str, list]:
+        if self.cfg.jit_rounds if jit_rounds is None else jit_rounds:
+            return self._run_scanned(progress)
         cfg = self.cfg
         for t in range(cfg.rounds):
             t_start = time.perf_counter()
+            # one key per round, split between selection and the cohort
+            # — the SAME chain the scanned path consumes
+            self.rng, kr = jax.random.split(self.rng)
+            k_sel, k_loc = jax.random.split(kr)
+            ids = np.asarray(self.selector.select(t, key=k_sel))
+            rngs = jax.random.split(k_loc, len(ids))
             # paper's lr schedule: decay 0.5 every 10 rounds — passed as
             # a traced array so a new value is just new data, not a
             # retrace of the cohort step
-            decay = jnp.float32(cfg.lr_decay ** (t // cfg.lr_decay_every))
-
-            ids = np.asarray(self.selector.select(t))
-            self.rng, kr = jax.random.split(self.rng)
-            rngs = jax.random.split(kr, len(ids))
+            decay = jnp.float32(cfg.lr_decay) ** (t // cfg.lr_decay_every)
             extras = (_tree_stack_gather(self._extras, ids)
                       if self._extras else {})
             new_params, new_extras, metrics = self._lu_vmapped(
@@ -134,61 +169,145 @@ class FederatedServer:
                 self._extras = _tree_stack_scatter(self._extras, ids,
                                                    new_extras)
             # Δb per participant (before aggregation overwrites params)
-            bias_updates = self._bias_updates(new_params)
+            bias_updates = head_bias_updates_stacked(self.params,
+                                                     new_params)
             # aggregate: θ^{t+1} = (1/K) Σ θ_k
             self.params = jax.tree_util.tree_map(
                 lambda stacked: jnp.mean(stacked, axis=0), new_params)
 
-            kw: Dict[str, Any] = {}
-            if bias_updates is not None:
-                kw["bias_updates"] = np.asarray(bias_updates)
+            losses = full_updates = None
             if "loss_all" in self.selector.requires:
                 losses, _ = self._eval_vmapped(self.params, self.x, self.y,
                                                self.mask)
-                kw["losses"] = np.asarray(losses)
             if "full_all" in self.selector.requires:
                 self.rng, kg = jax.random.split(self.rng)
-                g = self._grad_all(self.params, self.x, self.y, self.mask,
-                                   jax.random.split(kg, cfg.num_clients))
-                kw["full_updates"] = np.asarray(g)
+                full_updates = self._grad_all(
+                    self.params, self.x, self.y, self.mask,
+                    jax.random.split(kg, cfg.num_clients))
             elif "full_sel" in self.selector.requires:
                 flat_global = _flatten_params(self.params)
-                sel_updates = jax.vmap(
+                full_updates = jax.vmap(
                     lambda p: _flatten_params(p) - flat_global)(new_params)
-                kw["full_updates"] = np.asarray(sel_updates)
-            self.selector.update(t, list(ids), **kw)
+            self.selector.update(t, list(ids), Observations(
+                bias_updates=bias_updates, full_updates=full_updates,
+                losses=losses))
 
             self.history["round"].append(t)
             self.history["train_loss"].append(
                 float(np.mean(np.asarray(metrics["train_loss"]))))
             self.history["selected"].append(ids.tolist())
-            ent = getattr(self.selector, "estimated_entropies", lambda: None)()
+            ent = self.selector.estimated_entropies()
             self.history["bias_entropy"].append(
                 None if ent is None else ent.tolist())
             self.history["wall_s"].append(time.perf_counter() - t_start)
 
             if self.test is not None and (t % cfg.eval_every == 0
                                           or t == cfg.rounds - 1):
-                tl, ta = self._eval(self.params, self.test["x"],
-                                    self.test["y"], self.test["mask"])
-                self.history["test_round"].append(t)
-                self.history["test_loss"].append(float(tl))
-                self.history["test_acc"].append(float(ta))
-                if progress:
-                    print(f"round {t:4d} loss={self.history['train_loss'][-1]:.4f} "
-                          f"test_acc={float(ta):.4f}", flush=True)
+                self._eval_round(t, progress)
+        return self._finish()
+
+    # ------------------------------------------------------------------
+    def _make_round_step(self) -> Callable:
+        """One fully-jitted federated round over the functional selector
+        core: (params, extras, selector state) carry, (t, key) input."""
+        cfg = self.cfg
+        fn = self.selector.fn
+        has_extras = bool(self._extras)
+        need_losses = "loss_all" in fn.requires
+        lu_v = jax.vmap(self._lu, in_axes=(None, 0, 0, 0, 0, 0, None))
+
+        def round_step(carry, xs):
+            params, extras, sstate = carry
+            t, kr = xs
+            k_sel, k_loc = jax.random.split(kr)
+            ids, sstate = fn.select(sstate, t, k_sel)
+            rngs = jax.random.split(k_loc, cfg.num_select)
+            decay = jnp.float32(cfg.lr_decay) ** (t // cfg.lr_decay_every)
+            ex_sel = (_tree_stack_gather(extras, ids) if has_extras
+                      else {})
+            new_params, new_extras, metrics = lu_v(
+                params, ex_sel, self.x[ids], self.y[ids], self.mask[ids],
+                rngs, decay)
+            if has_extras:
+                extras = _tree_stack_scatter(extras, ids, new_extras)
+            bias_updates = head_bias_updates_stacked(params, new_params)
+            params = jax.tree_util.tree_map(
+                lambda stacked: jnp.mean(stacked, axis=0), new_params)
+            losses = None
+            if need_losses:
+                losses, _ = self._eval_vmapped(params, self.x, self.y,
+                                               self.mask)
+            sstate = fn.update(sstate, t, ids, Observations(
+                bias_updates=bias_updates, losses=losses))
+            ent = (fn.entropies(sstate) if fn.entropies is not None
+                   else jnp.zeros((0,), jnp.float32))
+            out = (ids, jnp.mean(metrics["train_loss"]), ent)
+            return (params, extras, sstate), out
+
+        return round_step
+
+    def _run_scanned(self, progress: bool = False) -> Dict[str, list]:
+        cfg = self.cfg
+        fn = self.selector.fn
+        unmet = fn.requires - _SCANNABLE
+        if unmet or not fn.jit_capable:
+            raise ValueError(
+                f"jit_rounds=True unsupported for selector {fn.name!r} "
+                f"(needs host-side {sorted(unmet)})")
+        if self._round_step is None:
+            self._round_step = self._make_round_step()
+        if self._scan_jit is None:
+            self._scan_jit = jax.jit(
+                lambda carry, xs: jax.lax.scan(self._round_step, carry, xs))
+        carry = (self.params, self._extras, self.selector.state)
+        # segments of eval_every rounds; evaluation lands after each
+        # segment's LAST round (the host loop evals after rounds
+        # 0, ee, 2ee, ... — same cadence, one round offset).  Equal
+        # segment lengths keep the scanned round_step at one compile.
+        seg_len = cfg.eval_every if self.test is not None else cfg.rounds
+        t = 0
+        while t < cfg.rounds:
+            n = min(seg_len, cfg.rounds - t)
+            keys = []
+            for _ in range(n):       # same key chain as the host loop
+                self.rng, kr = jax.random.split(self.rng)
+                keys.append(kr)
+            xs = (jnp.arange(t, t + n, dtype=jnp.int32), jnp.stack(keys))
+            t_start = time.perf_counter()
+            carry, (ids_seg, loss_seg, ent_seg) = self._scan_jit(carry, xs)
+            jax.block_until_ready(carry)
+            wall = (time.perf_counter() - t_start) / n
+            ids_np = np.asarray(ids_seg)
+            loss_np = np.asarray(loss_seg)
+            ent_np = np.asarray(ent_seg)
+            for i in range(n):
+                self.history["round"].append(t + i)
+                self.history["train_loss"].append(float(loss_np[i]))
+                self.history["selected"].append(ids_np[i].tolist())
+                self.history["bias_entropy"].append(
+                    ent_np[i].tolist() if ent_np.shape[-1] else None)
+                self.history["wall_s"].append(wall)   # segment mean
+            t += n
+            self.params, self._extras, self.selector.state = carry
+            if self.test is not None:
+                self._eval_round(t - 1, progress)
+        return self._finish()
+
+    # ------------------------------------------------------------------
+    def _eval_round(self, t: int, progress: bool) -> None:
+        tl, ta = self._eval(self.params, self.test["x"],
+                            self.test["y"], self.test["mask"])
+        self.history["test_round"].append(t)
+        self.history["test_loss"].append(float(tl))
+        self.history["test_acc"].append(float(ta))
+        if progress:
+            print(f"round {t:4d} loss={self.history['train_loss'][-1]:.4f} "
+                  f"test_acc={float(ta):.4f}", flush=True)
+
+    def _finish(self) -> Dict[str, list]:
         self.history["select_seconds"] = self.selector.select_seconds
         self.history["update_seconds"] = self.selector.update_seconds
         return self.history
-
-    # ------------------------------------------------------------------
-    def _bias_updates(self, new_params_stacked) -> Optional[np.ndarray]:
-        """Δb (or bias-free ΔW surrogate) per participant — (K, C).
-
-        One stacked-leaf subtraction over the whole cohort; no
-        per-client Python loop."""
-        return head_bias_updates_stacked(self.params, new_params_stacked)
-
 
 def rounds_to_accuracy(history: Dict[str, list], target: float
                        ) -> Optional[int]:

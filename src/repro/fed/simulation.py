@@ -37,6 +37,7 @@ class ExperimentSpec:
     data: SyntheticSpec = dataclasses.field(default_factory=SyntheticSpec)
     eval_every: int = 5
     seed: int = 0
+    jit_rounds: bool = False       # scan whole rounds (see fed.server)
 
 
 def build(spec: ExperimentSpec):
@@ -69,7 +70,8 @@ def build(spec: ExperimentSpec):
         num_clients=spec.num_clients, num_select=spec.num_select,
         rounds=spec.rounds, selector=spec.selector,
         selector_kw=spec.selector_kw, local=spec.local,
-        eval_every=spec.eval_every, seed=spec.seed)
+        eval_every=spec.eval_every, seed=spec.seed,
+        jit_rounds=spec.jit_rounds)
     test = {"x": xte, "y": yte,
             "mask": np.ones(len(yte), dtype=np.float32)}
     server = FederatedServer(init, apply, fed_cfg, X, Y, M, test=test,

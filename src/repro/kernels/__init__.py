@@ -11,6 +11,13 @@
 
 Each kernel has a pure-jnp oracle in ref.py; ops.py is the dispatching
 public API (TPU -> compiled Pallas, CPU -> interpret/oracle).
+
+All entry points are jit/scan-compatible: ``hics_selection_step`` is
+the device half of the functional selector protocol
+(``repro.core.selectors.functional``) and runs *inside* the scanned
+``round_step`` when ``FederatedServer`` is driven with
+``jit_rounds=True`` — no host round trip between the cohort step and
+the next selection.
 """
 from repro.kernels.ops import (estimate_entropies, fused_row_stats,
                                gqa_decode_attention, hics_selection_step,

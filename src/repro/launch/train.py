@@ -32,7 +32,8 @@ import numpy as np
 
 from repro.checkpoint import save_pytree
 from repro.configs import get_config
-from repro.core import estimate_entropy, head_bias_update, make_selector
+from repro.core import (head_bias_updates_stacked, head_num_classes,
+                        make_selector)
 from repro.data import make_lm_streams
 from repro.launch.mesh import make_host_mesh
 from repro.models import get_model
@@ -111,41 +112,49 @@ def main():
     n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
     print(f"arch={cfg.name} params={n_params/1e6:.2f}M vocab={cfg.vocab_size}")
 
+    # uniform kwarg surface: selectors that don't use a kwarg ignore it,
+    # so there is no per-selector construction branch
     sel = make_selector(args.selector, num_clients=args.clients,
                         num_select=args.select, total_rounds=args.rounds,
-                        temperature=args.temperature, seed=args.seed) \
-        if args.selector == "hics" else \
-        make_selector(args.selector, num_clients=args.clients,
-                      num_select=args.select, total_rounds=args.rounds,
-                      seed=args.seed)
+                        temperature=args.temperature,
+                        num_classes=head_num_classes(params) or 1,
+                        seed=args.seed)
 
     mesh = make_host_mesh()
-    history = {"round": [], "loss": [], "selected": []}
+    history = {"round": [], "loss": [], "selected": [],
+               "bias_entropy": [], "wall_s": []}
     with mesh:
         for t in range(args.rounds):
             t0 = time.time()
             ids = sel.select(t)
-            new_params, dbs, losses = [], [], []
+            new_params, losses = [], []
             for k in ids:
                 pk, loss = local_lm_update(api, params, toks[k], args.lr,
                                            args.epochs)
                 new_params.append(pk)
-                db = head_bias_update(params, pk)
-                dbs.append(np.asarray(db))
                 losses.append(float(loss))
+            # Δb for the whole cohort in one stacked-leaf subtraction
+            stacked = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *new_params)
+            dbs = head_bias_updates_stacked(params, stacked)
             params = jax.tree_util.tree_map(
-                lambda *xs: jnp.mean(jnp.stack(xs), axis=0), *new_params)
-            sel.update(t, ids, bias_updates=np.stack(dbs))
+                lambda s: jnp.mean(s, axis=0), stacked)
+            sel.update(t, ids, bias_updates=dbs)
+            ent = sel.estimated_entropies()
             history["round"].append(t)
             history["loss"].append(float(np.mean(losses)))
             history["selected"].append(list(map(int, ids)))
-            ent = getattr(sel, "estimated_entropies", lambda: None)()
+            history["bias_entropy"].append(
+                None if ent is None else ent.tolist())
+            history["wall_s"].append(time.time() - t0)
             print(f"round {t:3d} loss={np.mean(losses):.4f} "
                   f"sel={list(ids)} "
-                  f"({time.time()-t0:.1f}s)", flush=True)
+                  f"({history['wall_s'][-1]:.1f}s)", flush=True)
             if args.ckpt_dir and (t + 1) % 10 == 0:
                 save_pytree(Path(args.ckpt_dir) / f"step_{t+1}.npz",
                             params, step=t + 1)
+    history["select_seconds"] = sel.select_seconds
+    history["update_seconds"] = sel.update_seconds
     if args.out:
         Path(args.out).write_text(json.dumps(history, indent=1))
     print("done. final loss:", history["loss"][-1])

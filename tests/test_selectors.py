@@ -148,8 +148,9 @@ def test_selection_overhead_is_o_c(rng):
         jds = divfl.select(t)
         divfl.update(t, jds, full_updates=full)
     assert hics.update_seconds < divfl.update_seconds + 0.5
-    # the Δb state is tiny: N x C floats
-    assert hics._delta_b.nbytes == N * C * 8
+    # the Δb state is tiny: N x C f32 on device
+    assert hics._delta_b.nbytes == N * C * 4
+    assert hics.state.delta_b.shape == (N, C)
 
 
 def test_unknown_selector_raises():

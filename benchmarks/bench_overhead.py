@@ -113,11 +113,44 @@ def selection_step_comparison() -> dict:
     return out
 
 
+def clustering_scaling(ns=(64, 256, 512), repeats: int = 3) -> dict:
+    """``agglomerate_device`` (naive O(N³), on-device) vs the numpy
+    lazy-min-cache ``agglomerate`` (amortized O(N²)) — the clustering
+    cost the sweep engine pays inside every vmapped selection step, so
+    its scaling must stay visible in the per-PR trajectory."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import agglomerate, agglomerate_device
+
+    rng = np.random.default_rng(0)
+    out: dict = {}
+    for n in ns:
+        x = rng.normal(size=(n, 8))
+        dist = np.sqrt(((x[:, None] - x[None, :]) ** 2).sum(-1))
+        dev = jax.jit(lambda d: agglomerate_device(d, 8))
+        dev(jnp.asarray(dist)).block_until_ready()      # compile
+        t_dev = t_np = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            dev(jnp.asarray(dist)).block_until_ready()
+            t_dev = min(t_dev, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            agglomerate(dist, 8)
+            t_np = min(t_np, time.perf_counter() - t0)
+        out[f"N={n}"] = {"device_seconds": t_dev, "numpy_seconds": t_np,
+                         "device_over_numpy": t_dev / t_np}
+        print(f"  agglomerate N={n:4d}: device {t_dev*1e3:8.2f} ms  "
+              f"numpy(lazy-min) {t_np*1e3:8.2f} ms", flush=True)
+    return out
+
+
 def main(quick: bool = True):
     print("== bench_overhead (Table 3 analogue) ==", flush=True)
     res = run()
     sel = selection_step_comparison()
     res["selection_step"] = sel
+    clus = clustering_scaling()
+    res["clustering_scaling"] = clus
     save_result("table3_overhead", res)
     # repo-root perf trajectory artifact (one file per concern)
     (REPO_ROOT / "BENCH_selection.json").write_text(json.dumps({
@@ -125,6 +158,7 @@ def main(quick: bool = True):
                 "backend; TPU path is the Pallas kernel pipeline)",
         "pre_gram_hbm_sweeps": {"fused": 1, "unfused": 3},
         "results": sel,
+        "clustering_scaling": clus,
     }, indent=1))
     print(f"  wrote {REPO_ROOT / 'BENCH_selection.json'}", flush=True)
     thetas = sorted(next(iter(res.values())).keys()) \

@@ -1,0 +1,47 @@
+"""Sweep-engine benchmark: vmapped multi-seed execution vs the python
+seed loop (and the legacy FederatedServer host loop), written to
+``BENCH_sweep.json`` at the repo root — the batched-evaluation
+throughput trajectory CI tracks per PR.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import md_table, save_result
+from repro.data import SyntheticSpec
+from repro.fed import LocalSpec
+from repro.scenarios import SweepSpec, bench_sweep
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def main(quick: bool = True):
+    print("== bench_sweep (vmapped seeds vs python seed loop) ==",
+          flush=True)
+    spec = SweepSpec(
+        scenarios=("mixed_80_20", "dir_mild"),
+        selectors=("hics", "random"),
+        seeds=(0, 1, 2, 3) if quick else tuple(range(8)),
+        num_clients=10 if quick else 32, num_select=3,
+        rounds=6 if quick else 20,
+        samples_train=400 if quick else 2000,
+        samples_test=120 if quick else 400,
+        data=SyntheticSpec(dim=16, rank=2, noise=0.5),
+        local=LocalSpec(algo="fedavg", optimizer="sgd", lr=0.1,
+                        epochs=1, batch_size=32))
+    res = bench_sweep(spec, include_host=quick)
+    save_result("sweep_throughput", res)
+    (REPO_ROOT / "BENCH_sweep.json").write_text(json.dumps(res, indent=1))
+    print(f"  wrote {REPO_ROOT / 'BENCH_sweep.json'}", flush=True)
+    rows = [(cell, f"{d['vmapped_s']:.2f}", f"{d['serial_engine_s']:.2f}",
+             f"{d['speedup_vs_serial']:.2f}x",
+             f"{d.get('host_loop_s', float('nan')):.2f}")
+            for cell, d in res["grid"].items()]
+    print(md_table(["scenario/selector", "vmapped s", "serial s",
+                    "speedup", "host-loop s"], rows))
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,8 @@ as artifacts — see .github/workflows/ci.yml).
 Modules:
   selectors  — Tables 1 + 2 (final acc, rounds-to-target, speedup) +
                Fig. 3 (loss variance) across 3 heterogeneity settings
+  sweep      — vmapped multi-seed sweep vs python seed loop
+               (``BENCH_sweep.json``; see repro.scenarios)
   overhead   — Table 3 (selection compute scaling vs |θ| and C)
   estimation — Figs. 5, 8-11 (Ĥ vs H, Assumption 3.1 envelope)
   kernels    — Pallas kernels vs oracles at LLM-head scale
@@ -25,8 +27,8 @@ import argparse
 import sys
 import time
 
-MODULES = ("selectors", "overhead", "estimation", "ablations", "kernels",
-           "roofline")
+MODULES = ("selectors", "sweep", "overhead", "estimation", "ablations",
+           "kernels", "roofline")
 
 
 def main():

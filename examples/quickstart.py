@@ -68,6 +68,7 @@ def main():
           f" total across {ROUNDS} rounds (O(C) server-side)")
 
     selector_api_tour()
+    scenario_sweep_tour()
 
 
 def selector_api_tour():
@@ -111,6 +112,32 @@ def selector_api_tour():
     print("state pytree leaves:",
           [tuple(l.shape) for l in jax.tree_util.tree_leaves(state)][:5],
           "...")
+
+
+def scenario_sweep_tour():
+    """A multi-seed, multi-scenario sweep in 3 lines.
+
+    ``repro.scenarios`` holds device-resident heterogeneity scenarios
+    (the paper's §4.1 settings plus shards / quantity-skew / dropout
+    regimes) and a sweep engine that vmaps the jitted round loop over a
+    stack of seeds — partitions, selector states, and model params all
+    batched — so "S seeds × scenario × selector" is one XLA program,
+    reproducing the host loop seed-for-seed (tests/test_sweep.py).
+    """
+    print("\n=== scenario sweep: seeds vmapped, 3 lines ===")
+    from repro.data import SyntheticSpec
+    from repro.scenarios import SweepSpec, run_sweep
+
+    # the 3 lines (spec / run / read) — sized down for the quickstart:
+    spec = SweepSpec(scenarios=("mixed_80_20", "dir_mild"),
+                     selectors=("hics", "random"), seeds=(0, 1),
+                     num_clients=10, num_select=3, rounds=6,
+                     samples_train=400, samples_test=120,
+                     data=SyntheticSpec(dim=16, rank=2, noise=0.5),
+                     local=LocalSpec(lr=0.1, epochs=1, batch_size=32))
+    res = run_sweep(spec)
+    print({cell: f"{d['final_acc_mean']:.3f}±{d['final_acc_std']:.3f}"
+           for cell, d in res["grid"].items()})
 
 
 if __name__ == "__main__":

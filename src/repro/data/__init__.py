@@ -1,6 +1,7 @@
 from repro.data.synthetic import (SyntheticSpec, client_label_distributions,
                                   make_classification_data, make_lm_streams,
-                                  pad_and_stack)
+                                  make_train_test, pad_and_stack)
 
 __all__ = ["SyntheticSpec", "client_label_distributions",
-           "make_classification_data", "make_lm_streams", "pad_and_stack"]
+           "make_classification_data", "make_lm_streams",
+           "make_train_test", "pad_and_stack"]

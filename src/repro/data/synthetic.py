@@ -46,6 +46,24 @@ def make_classification_data(rng: np.random.Generator, spec: SyntheticSpec,
     return x.astype(np.float32), y.astype(np.int32), protos.astype(np.float32)
 
 
+def make_train_test(rng: np.random.Generator, spec: SyntheticSpec,
+                    samples_train: int, samples_test: int
+                    ) -> Tuple[Dict[str, np.ndarray],
+                               Dict[str, np.ndarray], np.ndarray]:
+    """Train/test split of the classification task in the dict layout
+    the federated stack consumes: ``train = {x, y}``, ``test = {x, y,
+    mask}`` (test mask all-ones).  Shared by the one-experiment builder
+    (repro.fed.simulation) and the scenario registry
+    (repro.scenarios.registry), so both draw the same task from the
+    same rng chain."""
+    x, y, protos = make_classification_data(
+        rng, spec, samples_train + samples_test)
+    train = {"x": x[:samples_train], "y": y[:samples_train]}
+    test = {"x": x[samples_train:], "y": y[samples_train:],
+            "mask": np.ones(samples_test, dtype=np.float32)}
+    return train, test, protos
+
+
 def make_lm_streams(rng: np.random.Generator, vocab: int, seq_len: int,
                     num_clients: int, seqs_per_client: int,
                     alphas: Sequence[float],

@@ -47,7 +47,10 @@ def _masked_ce(logits, labels, mask):
     logits = logits.astype(jnp.float32)
     logz = jax.nn.logsumexp(logits, axis=-1)
     tgt = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
-    per = (logz - tgt) * mask
+    # where(), not multiply-by-zero: padded rows may carry arbitrary
+    # gathered values (scenarios index layout), and 0·inf would leak
+    # NaN into the mean even though the row is masked out
+    per = jnp.where(mask > 0, logz - tgt, 0.0) * mask
     return per.sum() / jnp.maximum(mask.sum(), 1.0)
 
 

@@ -29,16 +29,23 @@ def dirichlet_partition(rng: np.random.Generator, labels: np.ndarray,
         for k, cnt in enumerate(counts):
             client_idx[k].extend(idx[start:start + cnt])
             start += cnt
-    out = []
-    pool = list(range(len(labels)))
+    out = [np.asarray(client_idx[k], dtype=np.int64)
+           for k in range(num_clients)]
+    # Top up starved clients by STEALING from the currently-largest
+    # client (never below the floor itself), so the result remains a
+    # true partition — every index appears exactly once.
     for k in range(num_clients):
-        ids = np.asarray(client_idx[k], dtype=np.int64)
-        if len(ids) < min_per_client:   # top up starved clients
-            extra = rng.choice(pool, min_per_client - len(ids),
-                               replace=False)
-            ids = np.concatenate([ids, extra])
+        while len(out[k]) < min_per_client:
+            sizes = np.array([len(o) for o in out])
+            sizes[k] = -1                        # never donate to self
+            donor = int(np.argmax(sizes))
+            if sizes[donor] <= max(min_per_client, 1):
+                break                            # nothing left to steal
+            j = int(rng.integers(len(out[donor])))
+            out[k] = np.append(out[k], out[donor][j])
+            out[donor] = np.delete(out[donor], j)
+    for ids in out:
         rng.shuffle(ids)
-        out.append(ids)
     return out
 
 

@@ -143,6 +143,24 @@ class FederatedServer:
         }
 
     # ------------------------------------------------------------------
+    @classmethod
+    def from_partition(cls, init_fn, apply_fn, cfg: FedConfig,
+                       x, y, partition,
+                       test: Optional[Dict[str, np.ndarray]] = None,
+                       features_fn=None) -> "FederatedServer":
+        """Build a server from a dataset + fixed-capacity partition
+        (e.g. a ``repro.scenarios`` device :class:`Partition` with
+        ``idx``/``mask`` fields).  Client tensors are materialized by
+        gathering rows through the index layout — exactly the arrays
+        the vmapped sweep engine gathers on the fly, so a host-loop
+        run over this server is the sweep's parity oracle."""
+        idx = np.asarray(partition.idx)
+        return cls(init_fn, apply_fn, cfg, np.asarray(x)[idx],
+                   np.asarray(y)[idx],
+                   np.asarray(partition.mask, dtype=np.float32),
+                   test=test, features_fn=features_fn)
+
+    # ------------------------------------------------------------------
     def run(self, progress: bool = False,
             jit_rounds: Optional[bool] = None) -> Dict[str, list]:
         if self.cfg.jit_rounds if jit_rounds is None else jit_rounds:

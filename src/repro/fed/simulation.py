@@ -15,7 +15,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.data import (SyntheticSpec, client_label_distributions,
-                        make_classification_data, pad_and_stack)
+                        make_train_test, pad_and_stack)
 from repro.fed.client import LocalSpec
 from repro.fed.partition import multi_alpha_partition
 from repro.fed.server import FedConfig, FederatedServer
@@ -46,10 +46,9 @@ def build(spec: ExperimentSpec):
     cfg = get_config(spec.arch)
     data_spec = dataclasses.replace(spec.data,
                                     num_classes=cfg.vocab_size)
-    x, y, protos = make_classification_data(
-        rng, data_spec, spec.samples_train + spec.samples_test)
-    xtr, ytr = x[: spec.samples_train], y[: spec.samples_train]
-    xte, yte = x[spec.samples_train:], y[spec.samples_train:]
+    train, test, protos = make_train_test(
+        rng, data_spec, spec.samples_train, spec.samples_test)
+    xtr, ytr = train["x"], train["y"]
 
     parts, client_alpha = multi_alpha_partition(
         rng, ytr, spec.num_clients, spec.alphas)
@@ -72,8 +71,6 @@ def build(spec: ExperimentSpec):
         selector_kw=spec.selector_kw, local=spec.local,
         eval_every=spec.eval_every, seed=spec.seed,
         jit_rounds=spec.jit_rounds)
-    test = {"x": xte, "y": yte,
-            "mask": np.ones(len(yte), dtype=np.float32)}
     server = FederatedServer(init, apply, fed_cfg, X, Y, M, test=test,
                              features_fn=features)
     info = {"label_dists": label_dists, "client_alpha": client_alpha,

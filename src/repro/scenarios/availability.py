@@ -1,0 +1,97 @@
+"""Time-varying client availability, fed into selection as a mask.
+
+Real federations never see the full client population each round —
+devices sleep, roam, and churn.  A scenario's availability schedule is
+a pure function ``(t, key) -> (N,) bool`` (so it vmaps over seeds and
+scans over rounds), and :func:`masked_select` is the generic combinator
+that applies it to ANY functional selector without touching the
+selector's own code:
+
+  1. the selector sees a state whose weights are zeroed for
+     unavailable clients (stage-2 / multinomial samplers then avoid
+     them on their own);
+  2. any unavailable client that still slips through (e.g. HiCS-FL's
+     coverage sweep, or a cluster whose members are all offline) is
+     replaced by a Gumbel draw ∝ p_k from the available-and-unchosen
+     pool.
+
+If fewer than K clients are available the surplus picks are kept as-is
+(the round proceeds under-provisioned rather than deadlocking) — the
+registry's stock schedules keep E[#available] well above K.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.selectors.functional import FunctionalSelector, SelectorState
+
+_LOG_FLOOR = 1e-30
+
+
+def availability_mask(scenario, num_clients: int, t, key: jax.Array
+                      ) -> jnp.ndarray:
+    """(N,) bool availability for round ``t`` (pure; traced-``t`` safe).
+
+    kinds: "always" — all on; "dropout" — iid Bernoulli(1 − p) per
+    client per round; "blocks" — staggered duty cycles: client k is
+    offline for ``round(p·period)`` rounds of every ``period``, with
+    phase k mod period (a crude diurnal model).
+    """
+    n = num_clients
+    if scenario.availability == "always":
+        return jnp.ones(n, bool)
+    if scenario.availability == "dropout":
+        return jax.random.bernoulli(key, 1.0 - scenario.avail_p, (n,))
+    if scenario.availability == "blocks":
+        period = max(1, int(scenario.avail_period))
+        off = int(round(scenario.avail_p * period))
+        phase = (t + jnp.arange(n)) % period
+        return phase >= off
+    raise ValueError(f"unknown availability {scenario.availability!r}")
+
+
+def replace_unavailable(key: jax.Array, ids: jnp.ndarray,
+                        avail: jnp.ndarray,
+                        weights: jnp.ndarray) -> jnp.ndarray:
+    """Swap unavailable picks for Gumbel draws ∝ weights from the
+    available-and-unchosen pool (fixed-shape, jit/vmap-compatible)."""
+    k = ids.shape[0]
+    n = avail.shape[0]
+    chosen = jnp.zeros(n, bool).at[ids].set(True)
+    ok = avail[ids]                                  # (K,) keepers
+    pool = avail & ~chosen
+    logw = jnp.log(jnp.clip(weights, _LOG_FLOOR, None)).astype(jnp.float32)
+    g = jax.random.gumbel(key, (n,), jnp.float32)
+    cand = jax.lax.top_k(jnp.where(pool, logw + g, -jnp.inf), k)[1]
+    rank = jnp.clip(jnp.cumsum(~ok) - 1, 0, k - 1)   # i-th bad → rank-th
+    repl = cand[rank]
+    # only substitute when the candidate is genuinely from the pool
+    # (top_k over all-(-inf) rows returns arbitrary indices)
+    use = ~ok & pool[repl]
+    return jnp.where(use, repl, ids)
+
+
+def masked_select(fn: FunctionalSelector, state: SelectorState, t,
+                  key: jax.Array, avail: jnp.ndarray,
+                  repl_key: jax.Array):
+    """Run ``fn.select`` under an availability mask (see module doc).
+
+    Returns (ids, state) like ``fn.select``; the output state keeps the
+    selector's own transitions but the ORIGINAL weights — masking is
+    per-round, not persistent.  For clients the replacement step
+    swapped OUT, the select-transition's seen-pool marking is reverted:
+    an offline client picked by a coverage sweep never trained, so it
+    must stay unseen (and its Δb row unwritten) until it is actually
+    observed — ``update`` marks the clients that really participated.
+    """
+    w0 = state.weights
+    masked = state._replace(weights=jnp.where(avail, w0, 0.0))
+    ids0, out = fn.select(masked, t, key)
+    ids = replace_unavailable(repl_key, ids0, avail, w0)
+    replaced = ids != ids0
+    seen = out.seen.at[ids0].set(
+        jnp.where(replaced, state.seen[ids0], out.seen[ids0]))
+    return ids, out._replace(
+        weights=w0, seen=seen,
+        unseen_count=jnp.sum(~seen).astype(jnp.int32))

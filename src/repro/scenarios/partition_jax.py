@@ -1,0 +1,177 @@
+"""Pure-JAX, key-derived client partitions with a fixed-capacity layout.
+
+The host partitioner (``repro.fed.partition``) returns ragged index
+lists — fine for one experiment, fatal for a ``vmap`` axis.  Here a
+partition is a :class:`Partition` pytree of fixed-shape device arrays
+
+    idx    (N, cap) int32    row indices into the dataset
+    mask   (N, cap) float32  1.0 where the row is a real sample
+    counts (N,)     int32    true client sizes (before the cap clip)
+
+so a *batch of partitions* (one per seed) is just the same pytree with
+a leading seed axis, and the whole sweep engine
+(:mod:`repro.scenarios.sweep`) can vmap over it.
+
+Mechanism: every scheme is expressed as a per-sample *assignment*
+vector ``assign (S,) ∈ [0, N)`` drawn with fixed-shape primitives
+(Gumbel-argmax categoricals over per-class client log-proportions),
+then packed into the padded layout by one stable argsort.  The
+Dirichlet scheme draws per-class client proportions via
+``jax.random.loggamma`` — stable down to the paper's α = 10⁻³, where
+ordinary f32 gamma samples underflow to 0 — and assigns each sample
+multinomially, the standard device-friendly variant of the paper's
+App. A.10 largest-remainder split (identical in distribution over
+proportions; counts differ by multinomial noise only, which the shared
+invariant tests bound).
+
+Samples beyond ``cap`` for an overfull client are dropped (mask 0);
+``counts`` keeps the true size so callers can report the overflow.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_LOG_FLOOR = 1e-30
+
+
+class Partition(NamedTuple):
+    """Fixed-capacity device-resident partition (see module docstring)."""
+    idx: jnp.ndarray      # (N, cap) int32
+    mask: jnp.ndarray     # (N, cap) float32
+    counts: jnp.ndarray   # (N,) int32
+
+
+def pack_assignment(assign: jnp.ndarray, num_clients: int,
+                    cap: int) -> Partition:
+    """Pack a per-sample client-assignment vector into a Partition.
+
+    One stable argsort groups samples by client; client k's rows then
+    occupy a contiguous span, gathered into the (N, cap) layout with a
+    clamped position index.  Padded slots point at row 0 (a valid row —
+    the mask, not the value, makes them inert)."""
+    s = assign.shape[0]
+    order = jnp.argsort(assign)                       # stable
+    counts = jnp.bincount(assign, length=num_clients)
+    starts = jnp.concatenate(
+        [jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos = starts[:, None] + jnp.arange(cap)[None, :]
+    valid = jnp.arange(cap)[None, :] < jnp.minimum(counts, cap)[:, None]
+    idx = jnp.where(valid, order[jnp.clip(pos, 0, s - 1)], 0)
+    return Partition(idx.astype(jnp.int32), valid.astype(jnp.float32),
+                     counts.astype(jnp.int32))
+
+
+def _equal_split_groups(total: int, n_groups: int) -> np.ndarray:
+    """group id per position, matching ``np.array_split`` sizes."""
+    sizes = [len(a) for a in np.array_split(np.arange(total), n_groups)]
+    return np.repeat(np.arange(n_groups), sizes)
+
+
+def dirichlet_assign(key: jax.Array, labels: jnp.ndarray, num_classes: int,
+                     num_clients: int, alphas: Sequence[float]
+                     ) -> jnp.ndarray:
+    """Multi-α Dirichlet assignment (paper App. A.10 / §4.1 settings).
+
+    With one α this is the single-concentration scheme; with several,
+    clients and data are both equal-split into ``len(alphas)`` cohorts
+    and each data slice is partitioned over its client group with its
+    own α — exactly the host ``multi_alpha_partition`` structure.
+    """
+    s = labels.shape[0]
+    n_groups = len(alphas)
+    k_perm, k_gamma, k_cat = jax.random.split(key, 3)
+    group_of_client = jnp.asarray(_equal_split_groups(num_clients, n_groups))
+    alpha_per_client = jnp.asarray(np.asarray(alphas, np.float32))[
+        group_of_client]
+    # per-class, per-client log Dirichlet proportions (unnormalized —
+    # Gumbel-argmax is invariant to the per-class normalizer)
+    logp = jax.random.loggamma(
+        k_gamma, jnp.broadcast_to(alpha_per_client[None, :],
+                                  (num_classes, num_clients)))
+    logits = logp[labels]                                  # (S, N)
+    if n_groups > 1:
+        perm = jax.random.permutation(k_perm, s)
+        group_pos = jnp.asarray(_equal_split_groups(s, n_groups))
+        group_of_sample = jnp.zeros(s, jnp.int32).at[perm].set(
+            group_pos.astype(jnp.int32))
+        logits = jnp.where(group_of_client[None, :]
+                           == group_of_sample[:, None], logits, -jnp.inf)
+    g = jax.random.gumbel(k_cat, logits.shape, jnp.float32)
+    return jnp.argmax(logits + g, axis=1).astype(jnp.int32)
+
+
+def shards_assign(key: jax.Array, labels: jnp.ndarray, num_clients: int,
+                  labels_per_client: int) -> jnp.ndarray:
+    """Pathological label-skew: label-sorted data cut into N·L shards,
+    each client dealt L shards (McMahan et al.'s FedAvg partition)."""
+    s = labels.shape[0]
+    num_shards = num_clients * labels_per_client
+    shard_size = max(1, s // num_shards)
+    order = jnp.argsort(labels)                       # stable label sort
+    shard_of_pos = jnp.clip(jnp.arange(s) // shard_size, 0, num_shards - 1)
+    perm = jax.random.permutation(key, num_shards)
+    client_of_shard = (perm // labels_per_client).astype(jnp.int32)
+    return jnp.zeros(s, jnp.int32).at[order].set(
+        client_of_shard[shard_of_pos])
+
+
+def quantity_assign(key: jax.Array, num_samples: int, num_clients: int,
+                    beta: float) -> jnp.ndarray:
+    """Quantity skew: label-agnostic sizes ∝ Dir(β) over clients."""
+    k_gamma, k_cat = jax.random.split(key)
+    logq = jax.random.loggamma(
+        k_gamma, jnp.full((num_clients,), float(beta), jnp.float32))
+    g = jax.random.gumbel(k_cat, (num_samples, num_clients), jnp.float32)
+    return jnp.argmax(logq[None, :] + g, axis=1).astype(jnp.int32)
+
+
+def iid_assign(key: jax.Array, num_samples: int,
+               num_clients: int) -> jnp.ndarray:
+    """Exactly-balanced IID deal (round-robin under a permutation)."""
+    perm = jax.random.permutation(key, num_samples)
+    return jnp.zeros(num_samples, jnp.int32).at[perm].set(
+        (jnp.arange(num_samples) % num_clients).astype(jnp.int32))
+
+
+def partition_device(key: jax.Array, labels: jnp.ndarray, num_classes: int,
+                     num_clients: int, kind: str, cap: int, *,
+                     alphas: Sequence[float] = (0.5,),
+                     labels_per_client: int = 2,
+                     beta: float = 0.5) -> Partition:
+    """Key-derived partition of ``labels.shape[0]`` samples.
+
+    ``kind`` ∈ {"dirichlet", "multi_alpha", "shards", "quantity",
+    "iid"} — "dirichlet" and "multi_alpha" share one code path (the
+    former is the latter with a single cohort).  Pure jax: jit- and
+    vmap-compatible, so a stack of per-seed keys yields a stack of
+    partitions in one call.
+    """
+    s = labels.shape[0]
+    if kind in ("dirichlet", "multi_alpha"):
+        assign = dirichlet_assign(key, labels, num_classes, num_clients,
+                                  alphas)
+    elif kind == "shards":
+        assign = shards_assign(key, labels, num_clients, labels_per_client)
+    elif kind == "quantity":
+        assign = quantity_assign(key, s, num_clients, beta)
+    elif kind == "iid":
+        assign = iid_assign(key, s, num_clients)
+    else:
+        raise ValueError(f"unknown partition kind {kind!r}")
+    return pack_assignment(assign, num_clients, cap)
+
+
+def partition_label_distributions(part: Partition, labels: jnp.ndarray,
+                                  num_classes: int) -> jnp.ndarray:
+    """Per-client empirical label distribution (N, C) from the padded
+    layout — the device analogue of
+    ``repro.data.client_label_distributions``."""
+    y = labels[part.idx]                               # (N, cap)
+    onehot = jax.nn.one_hot(y, num_classes) * part.mask[..., None]
+    cnt = onehot.sum(axis=1)                           # (N, C)
+    tot = jnp.maximum(cnt.sum(axis=1, keepdims=True), 1.0)
+    return cnt / tot

@@ -1,0 +1,383 @@
+"""The vmapped multi-seed / multi-scenario sweep engine.
+
+One federated experiment is a pytree: model params, a
+``SelectorState``, a fixed-capacity :class:`~repro.scenarios.
+partition_jax.Partition`, and a per-round PRNG-key chain.  This module
+stacks that pytree over seeds and drives the SAME jitted round step the
+server scans — ``jax.vmap`` turns "run S seeds" into one XLA program
+whose cohort updates batch across seeds on the MXU, instead of S
+sequential Python loops.
+
+Parity contract (asserted in tests/test_sweep.py): for a fixed seed the
+engine reproduces ``FederatedServer``'s host loop exactly — same
+params-init / round-key / selector-key chains, same op order inside the
+round (select → vmapped local update → aggregate → stacked Δb →
+selector update), and client batches gathered through the partition's
+index tensor equal the server's materialized ``x[idx]`` arrays.  So
+per-seed participant sets are identical and accuracies match to f32
+tolerance, whether seeds run vmapped, serially through the engine, or
+serially through the server.
+
+Three drivers, one round step:
+
+  run_sweep(spec)            scenarios × selectors grid, seeds vmapped;
+                             mean±std accuracy / entropy trajectories
+  run_host_reference(...)    one (scenario, selector, seed) through the
+                             FederatedServer host loop on the same data
+  bench_sweep(spec)          vmapped vs python-seed-loop wall time →
+                             the BENCH_sweep.json payload
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (SELECTORS, Observations, head_bias_updates_stacked,
+                        head_num_classes, make_functional)
+from repro.data import SyntheticSpec
+from repro.fed.client import LocalSpec, make_eval_fn, make_local_update
+from repro.fed.server import _SCANNABLE, FedConfig, FederatedServer
+from repro.models.classifier import make_classifier
+from repro.scenarios.availability import availability_mask, masked_select
+from repro.scenarios.partition_jax import Partition
+from repro.scenarios.registry import (Scenario, get_scenario, make_dataset,
+                                      materialize, scenario_key)
+
+#: the sweep runs the server's scanned round body, so it can satisfy
+#: exactly the requirements that body can (one source of truth)
+_SWEEPABLE = _SCANNABLE
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """Declarative sweep grid: scenarios × selectors × seeds."""
+    scenarios: Sequence[str] = ("mixed_80_20", "dir_mild")
+    selectors: Sequence[str] = ("hics", "random")
+    seeds: Sequence[int] = (0, 1, 2, 3)
+    arch: str = "paper-mlp"
+    num_clients: int = 12
+    num_select: int = 3
+    rounds: int = 10
+    cap: Optional[int] = None        # fixed per-client capacity (None →
+    samples_train: int = 600         #  4·S/N, clipped to S)
+    samples_test: int = 200
+    selector_kw: Optional[Dict[str, Any]] = None
+    local: LocalSpec = dataclasses.field(default_factory=LocalSpec)
+    lr_decay_every: int = 10
+    lr_decay: float = 0.5
+    data_seed: int = 0
+    data: Optional[SyntheticSpec] = None   # overrides every scenario's
+
+    def capacity(self) -> int:
+        if self.cap is not None:
+            return int(self.cap)
+        return min(self.samples_train,
+                   max(1, 4 * self.samples_train // self.num_clients))
+
+    def scenario(self, name: str) -> Scenario:
+        scn = get_scenario(name)
+        if self.data is not None:
+            scn = dataclasses.replace(scn, data=self.data)
+        return scn
+
+
+def seed_keychain(seed: int, rounds: int):
+    """Replicates ``FederatedServer`` + selector-shim key chains for one
+    seed: (params-init key, selector-init key, (T, ...) round keys)."""
+    rng = jax.random.PRNGKey(int(seed))
+    rng, k_init = jax.random.split(rng)
+    round_keys = []
+    for _ in range(rounds):
+        rng, kr = jax.random.split(rng)
+        round_keys.append(kr)
+    _, k_sel = jax.random.split(jax.random.PRNGKey(int(seed)))
+    return k_init, k_sel, jnp.stack(round_keys)
+
+
+def _normalized_weights(mask_np: np.ndarray) -> jnp.ndarray:
+    """Client weights p_k ∝ |B_k| with the server/shim's exact
+    normalization chain (float64 host normalize, f32 device renorm)."""
+    w = mask_np.sum(axis=1).astype(np.float64)
+    w = w / w.sum()
+    wd = jnp.asarray(w, jnp.float32)
+    return wd / jnp.sum(wd)
+
+
+def _make_selector_fn(spec: SweepSpec, name: str, num_classes: int):
+    if name not in SELECTORS:
+        raise KeyError(f"unknown selector {name!r}; known: "
+                       f"{sorted(SELECTORS)}")
+    requires = SELECTORS[name].requires
+    unmet = requires - _SWEEPABLE
+    if unmet:
+        raise ValueError(
+            f"sweep engine unsupported for selector {name!r} (needs "
+            f"host-side {sorted(unmet)}); run it through the server loop")
+    kw = dict(spec.selector_kw or {})
+    if "bias_sel" in requires:
+        kw.setdefault("num_classes", num_classes)
+    return make_functional(name, num_clients=spec.num_clients,
+                           num_select=spec.num_select,
+                           total_rounds=spec.rounds, **kw)
+
+
+def make_seed_runner(spec: SweepSpec, scenario: Scenario, fn, apply_fn,
+                     x: jnp.ndarray, y: jnp.ndarray, test: dict):
+    """Build ``run_seed(params0, sstate0, partition, round_keys)`` — the
+    whole T-round experiment for ONE seed as a pure jit/vmap-compatible
+    function.  The round body mirrors ``FederatedServer._make_round_step``
+    so participant sets match the server loop key-for-key."""
+    cfg_n, cfg_k = spec.num_clients, spec.num_select
+    if spec.local.algo in ("feddyn", "moon"):
+        raise ValueError(
+            f"sweep engine supports stateless local algorithms; "
+            f"{spec.local.algo!r} carries per-client extras — use the "
+            f"server loop")
+    lu = make_local_update(apply_fn, spec.local)
+    lu_v = jax.vmap(lu, in_axes=(None, 0, 0, 0, 0, 0, None))
+    eval_fn = make_eval_fn(apply_fn)
+    eval_v = jax.vmap(lambda p, cx, cy, cm: eval_fn(p, cx, cy, cm),
+                      in_axes=(None, 0, 0, 0))
+    need_losses = "loss_all" in fn.requires
+    time_varying = scenario.time_varying
+    has_entropies = fn.entropies is not None
+
+    def run_seed(params0, sstate0, part: Partition, round_keys):
+        idx, mask = part.idx, part.mask
+
+        def round_step(carry, xs):
+            params, sstate = carry
+            t, kr = xs
+            k_sel, k_loc = jax.random.split(kr)
+            if time_varying:
+                avail = availability_mask(scenario, cfg_n, t,
+                                          jax.random.fold_in(kr, 1))
+                ids, sstate = masked_select(fn, sstate, t, k_sel, avail,
+                                            jax.random.fold_in(kr, 2))
+            else:
+                ids, sstate = fn.select(sstate, t, k_sel)
+            rngs = jax.random.split(k_loc, cfg_k)
+            decay = jnp.float32(spec.lr_decay) ** (t // spec.lr_decay_every)
+            sel_idx = idx[ids]                              # (K, cap)
+            new_params, _, metrics = lu_v(
+                params, {}, x[sel_idx], y[sel_idx], mask[ids], rngs, decay)
+            bias_updates = head_bias_updates_stacked(params, new_params)
+            params = jax.tree_util.tree_map(
+                lambda stacked: jnp.mean(stacked, axis=0), new_params)
+            losses = None
+            if need_losses:
+                losses, _ = eval_v(params, x[idx], y[idx], mask)
+            sstate = fn.update(sstate, t, ids, Observations(
+                bias_updates=bias_updates, losses=losses))
+            ent = (jnp.mean(fn.entropies(sstate)) if has_entropies
+                   else jnp.float32(0.0))
+            _, acc = eval_fn(params, test["x"], test["y"], test["mask"])
+            return (params, sstate), (ids, jnp.mean(metrics["train_loss"]),
+                                      ent, acc)
+
+        ts = jnp.arange(spec.rounds, dtype=jnp.int32)
+        (params, sstate), (ids, loss, ent, acc) = jax.lax.scan(
+            round_step, (params0, sstate0), (ts, round_keys))
+        return {"selected": ids, "train_loss": loss, "mean_entropy": ent,
+                "test_acc": acc}
+
+    return run_seed
+
+
+@dataclasses.dataclass
+class PairRun:
+    """Everything needed to run one (scenario, selector) cell."""
+    scenario: Scenario
+    selector: str
+    run_seed: Any                 # single-seed pure function
+    params0: Any                  # stacked over seeds
+    sstate0: Any
+    parts: Partition              # stacked over seeds
+    round_keys: jnp.ndarray       # (S, T, ...)
+    overflow_frac: float
+
+    def vmapped(self):
+        return jax.jit(jax.vmap(self.run_seed))
+
+    def serial(self):
+        return jax.jit(self.run_seed)
+
+    def seed_slice(self, i: int):
+        take = lambda a: jax.tree_util.tree_map(lambda l: l[i], a)
+        return (take(self.params0), take(self.sstate0), take(self.parts),
+                self.round_keys[i])
+
+
+def build_pair(spec: SweepSpec, scenario_name: str,
+               selector: str) -> PairRun:
+    """Materialize one grid cell: shared dataset, per-seed partitions /
+    params / selector states / key chains, and the seed runner."""
+    scn = spec.scenario(scenario_name)
+    cfg = get_config(spec.arch)
+    num_classes = cfg.vocab_size
+    cap = spec.capacity()
+    train, test, _ = make_dataset(scn, spec.samples_train,
+                                  spec.samples_test, num_classes,
+                                  spec.data_seed)
+    init_fn, apply_fn, _ = make_classifier(cfg, input_dim=scn.data.dim)
+
+    chains = [seed_keychain(s, spec.rounds) for s in spec.seeds]
+    k_inits = jnp.stack([c[0] for c in chains])
+    k_sels = jnp.stack([c[1] for c in chains])
+    round_keys = jnp.stack([c[2] for c in chains])
+
+    part_keys = jnp.stack([scenario_key(scn, int(s)) for s in spec.seeds])
+    parts = jax.vmap(lambda key: scn.partition(
+        key, train["y"], num_classes, spec.num_clients, cap))(part_keys)
+
+    params0 = jax.vmap(init_fn)(k_inits)
+    fn = _make_selector_fn(spec, selector,
+                           head_num_classes(
+                               jax.tree_util.tree_map(lambda l: l[0],
+                                                      params0)) or 1)
+    sstate0 = jax.vmap(fn.init)(k_sels)
+    weights = jnp.stack([_normalized_weights(np.asarray(parts.mask[i]))
+                         for i in range(len(spec.seeds))])
+    sstate0 = sstate0._replace(weights=weights)
+
+    counts = np.asarray(parts.counts, np.int64)
+    kept = np.asarray(parts.mask).sum()
+    overflow = float(1.0 - kept / max(1, counts.sum()))
+
+    run_seed = make_seed_runner(spec, scn, fn, apply_fn, train["x"],
+                                train["y"], test)
+    return PairRun(scn, selector, run_seed, params0, sstate0, parts,
+                   round_keys, overflow)
+
+
+def run_sweep(spec: SweepSpec, progress: bool = False) -> Dict[str, Any]:
+    """The full grid, seeds vmapped.  Returns per-cell per-seed raw
+    trajectories plus mean±std aggregates over seeds."""
+    grid: Dict[str, Any] = {}
+    for scenario_name in spec.scenarios:
+        for selector in spec.selectors:
+            pair = build_pair(spec, scenario_name, selector)
+            out = pair.vmapped()(pair.params0, pair.sstate0, pair.parts,
+                                 pair.round_keys)
+            out = jax.tree_util.tree_map(np.asarray, out)
+            acc, ent = out["test_acc"], out["mean_entropy"]
+            cell = {
+                "seeds": [int(s) for s in spec.seeds],
+                "selected": out["selected"],           # (S, T, K)
+                "train_loss": out["train_loss"],       # (S, T)
+                "test_acc": acc,
+                "mean_entropy": ent,
+                "final_acc": acc[:, -1].tolist(),
+                "final_acc_mean": float(acc[:, -1].mean()),
+                "final_acc_std": float(acc[:, -1].std()),
+                "acc_mean": acc.mean(axis=0).tolist(),
+                "acc_std": acc.std(axis=0).tolist(),
+                "entropy_mean": ent.mean(axis=0).tolist(),
+                "entropy_std": ent.std(axis=0).tolist(),
+                "train_loss_mean": out["train_loss"].mean(axis=0).tolist(),
+                "overflow_frac": pair.overflow_frac,
+            }
+            grid[f"{scenario_name}/{selector}"] = cell
+            if progress:
+                print(f"  {scenario_name:18s} {selector:8s} "
+                      f"acc={cell['final_acc_mean']:.3f}"
+                      f"±{cell['final_acc_std']:.3f}", flush=True)
+    return {"spec": _spec_dict(spec), "grid": grid}
+
+
+def run_host_reference(spec: SweepSpec, scenario_name: str, selector: str,
+                       seed: int) -> Dict[str, list]:
+    """One seed through the ``FederatedServer`` HOST loop on the same
+    dataset/partition the sweep engine uses — the parity oracle."""
+    scn = spec.scenario(scenario_name)
+    if scn.time_varying:
+        raise ValueError("the server loop has no availability schedule; "
+                         "host references need an always-on scenario")
+    cfg = get_config(spec.arch)
+    num_classes = cfg.vocab_size
+    cap = spec.capacity()
+    train, test, _ = make_dataset(scn, spec.samples_train,
+                                  spec.samples_test, num_classes,
+                                  spec.data_seed)
+    part = materialize(scn, seed, train, num_classes, spec.num_clients,
+                       cap)
+    init_fn, apply_fn, _ = make_classifier(cfg, input_dim=scn.data.dim)
+    fed_cfg = FedConfig(
+        num_clients=spec.num_clients, num_select=spec.num_select,
+        rounds=spec.rounds, selector=selector,
+        selector_kw=spec.selector_kw, local=spec.local,
+        eval_every=spec.rounds, seed=seed,
+        lr_decay_every=spec.lr_decay_every, lr_decay=spec.lr_decay)
+    server = FederatedServer.from_partition(
+        init_fn, apply_fn, fed_cfg, train["x"], train["y"], part,
+        test={k: np.asarray(v) for k, v in test.items()})
+    return server.run()
+
+
+def bench_sweep(spec: SweepSpec, include_host: bool = False
+                ) -> Dict[str, Any]:
+    """Vmapped-seeds vs python-seed-loop wall time per grid cell.
+
+    ``serial_engine_s`` loops the jitted single-seed runner (compile
+    excluded for both, so the delta is pure batching); with
+    ``include_host`` the FederatedServer host loop is timed as-is —
+    per-instance compiles included, because that is what the "one run
+    at a time" workflow actually pays."""
+    out: Dict[str, Any] = {
+        "what": "vmapped multi-seed sweep vs python seed loop",
+        "seeds": [int(s) for s in spec.seeds],
+        "rounds": spec.rounds, "num_clients": spec.num_clients,
+        "grid": {},
+    }
+    for scenario_name in spec.scenarios:
+        for selector in spec.selectors:
+            pair = build_pair(spec, scenario_name, selector)
+            args = (pair.params0, pair.sstate0, pair.parts,
+                    pair.round_keys)
+            vrun = pair.vmapped()
+            jax.block_until_ready(vrun(*args))            # compile
+            t0 = time.perf_counter()
+            jax.block_until_ready(vrun(*args))
+            vmapped_s = time.perf_counter() - t0
+
+            srun = pair.serial()
+            jax.block_until_ready(srun(*pair.seed_slice(0)))   # compile
+            t0 = time.perf_counter()
+            for i in range(len(spec.seeds)):
+                jax.block_until_ready(srun(*pair.seed_slice(i)))
+            serial_s = time.perf_counter() - t0
+
+            cell = {"vmapped_s": vmapped_s, "serial_engine_s": serial_s,
+                    "speedup_vs_serial": serial_s / vmapped_s}
+            # the server loop has no availability schedule, so the
+            # host-loop baseline only exists for always-on scenarios
+            if include_host and not pair.scenario.time_varying:
+                t0 = time.perf_counter()
+                for s in spec.seeds:
+                    run_host_reference(spec, scenario_name, selector,
+                                       int(s))
+                cell["host_loop_s"] = time.perf_counter() - t0
+                cell["speedup_vs_host"] = cell["host_loop_s"] / vmapped_s
+            out["grid"][f"{scenario_name}/{selector}"] = cell
+            print(f"  {scenario_name:18s} {selector:8s} "
+                  f"vmapped={vmapped_s:6.2f}s  serial={serial_s:6.2f}s  "
+                  f"({cell['speedup_vs_serial']:.2f}x)"
+                  + (f"  host={cell['host_loop_s']:6.2f}s"
+                     if "host_loop_s" in cell else ""), flush=True)
+    return out
+
+
+def _spec_dict(spec: SweepSpec) -> Dict[str, Any]:
+    d = dataclasses.asdict(spec)
+    d["scenarios"] = list(d["scenarios"])
+    d["selectors"] = list(d["selectors"])
+    d["seeds"] = [int(s) for s in d["seeds"]]
+    d["local"] = dataclasses.asdict(spec.local)
+    d["data"] = None if spec.data is None else dataclasses.asdict(spec.data)
+    return d

@@ -1,0 +1,319 @@
+"""Scenario subsystem: partition invariants shared between the host
+(numpy) and device (pure-jax) partitioners, the scenario registry, and
+the availability machinery."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import label_entropy, make_functional
+from repro.fed import dirichlet_partition, multi_alpha_partition
+from repro.scenarios import (SCENARIOS, Partition, availability_mask,
+                             get_scenario, masked_select,
+                             partition_device,
+                             partition_label_distributions,
+                             replace_unavailable, scenario_key)
+
+C = 10
+
+
+# ---------------------------------------------------------------------------
+# shared partition invariants (satellite: host/device co-tested)
+# ---------------------------------------------------------------------------
+
+
+def _host_invariants(parts, total):
+    """A host partition must be disjoint and complete."""
+    allidx = np.concatenate([p for p in parts if len(p)])
+    assert len(allidx) == total, "not complete"
+    assert len(np.unique(allidx)) == total, "not disjoint"
+
+
+def _device_invariants(part: Partition, total):
+    """A device partition must be disjoint and complete up to the cap
+    clip, with counts preserving every sample."""
+    idx = np.asarray(part.idx)
+    mask = np.asarray(part.mask)
+    counts = np.asarray(part.counts)
+    kept = idx[mask > 0]
+    assert counts.sum() == total                      # every sample owned
+    assert len(np.unique(kept)) == len(kept)          # disjoint
+    assert len(kept) == np.minimum(counts, idx.shape[1]).sum()
+    assert (idx >= 0).all() and (idx < total).all()
+
+
+def _labels(seed, n=4000):
+    return np.random.default_rng(seed).integers(0, C, n)
+
+
+@pytest.mark.parametrize("kind,kw", [
+    ("dirichlet", {"alphas": (0.01,)}),
+    ("multi_alpha", {"alphas": (0.001, 0.5)}),
+    ("shards", {"labels_per_client": 2}),
+    ("quantity", {"beta": 0.5}),
+    ("iid", {}),
+])
+def test_device_partition_invariants(kind, kw):
+    labels = _labels(0)
+    part = partition_device(jax.random.PRNGKey(3), jnp.asarray(labels),
+                            C, 16, kind, len(labels), **kw)
+    _device_invariants(part, len(labels))
+    # with cap == S nothing overflows: fully complete
+    assert float(part.mask.sum()) == len(labels)
+
+
+def test_device_partition_cap_overflow():
+    labels = _labels(1, 1000)
+    part = partition_device(jax.random.PRNGKey(0), jnp.asarray(labels),
+                            C, 8, "quantity", 64, beta=0.3)
+    _device_invariants(part, 1000)
+    counts = np.asarray(part.counts)
+    kept = np.asarray(part.mask).sum(axis=1)
+    np.testing.assert_array_equal(kept, np.minimum(counts, 64))
+
+
+def test_host_partitions_stay_partitions():
+    """Satellite regression: the min_per_client top-up steals from the
+    largest clients instead of duplicating global indices, so starved
+    cohorts still yield a true partition with the floor met."""
+    r = np.random.default_rng(0)
+    labels = r.integers(0, 5, 60)
+    parts = dirichlet_partition(r, labels, 20, 0.001, min_per_client=2)
+    _host_invariants(parts, 60)
+    assert all(len(p) >= 2 for p in parts)      # feasible: 20·2 ≤ 60
+
+    r = np.random.default_rng(1)
+    labels = r.integers(0, C, 10_000)
+    parts, client_alpha = multi_alpha_partition(
+        r, labels, 50, (0.001, 0.002, 0.005, 0.01, 0.5))
+    _host_invariants(parts, 10_000)             # no duplication, ever
+    # group coverage: equal client groups, each α represented
+    assert len(np.unique(client_alpha)) == 5
+    for a in (0.001, 0.5):
+        assert (client_alpha == a).sum() == 10
+
+
+def test_multi_alpha_group_slices_host_and_device():
+    """Group structure invariant, co-asserted on both partitioners:
+    cohort g's clients own exactly the g-th equal data slice."""
+    labels = _labels(2, 3000)
+    alphas = (0.001, 0.01, 0.5)
+    r = np.random.default_rng(5)
+    parts, client_alpha = multi_alpha_partition(r, labels, 12, alphas)
+    slice_sizes = [len(a) for a in np.array_split(np.arange(3000), 3)]
+    for g, a in enumerate(alphas):
+        got = sum(len(parts[k]) for k in range(12)
+                  if client_alpha[k] == a)
+        assert got == slice_sizes[g]
+
+    part = partition_device(jax.random.PRNGKey(7), jnp.asarray(labels),
+                            C, 12, "multi_alpha", 3000, alphas=alphas)
+    counts = np.asarray(part.counts)
+    groups = np.array_split(np.arange(12), 3)
+    for g, cg in enumerate(groups):
+        assert counts[cg].sum() == slice_sizes[g]
+
+
+def test_host_device_entropy_parity():
+    """The device multinomial-Dirichlet assignment must match the host
+    largest-remainder split in distribution: same per-label totals
+    (exact) and the same mean client label-entropy within multinomial
+    noise, across concentration regimes."""
+    S, N = 6000, 30
+    for alpha, tol in ((0.1, 0.15), (1.0, 0.1), (10.0, 0.1)):
+        hs, ds = [], []
+        for seed in range(3):
+            r = np.random.default_rng(seed)
+            labels = r.integers(0, C, S)
+            parts = dirichlet_partition(r, labels, N, alpha,
+                                        min_per_client=0)
+            dists = np.zeros((N, C))
+            for i, p in enumerate(parts):
+                if len(p):
+                    dists[i] = np.bincount(labels[p], minlength=C) / len(p)
+            hs.append(float(label_entropy(jnp.asarray(dists)).mean()))
+            part = partition_device(
+                jax.random.PRNGKey(seed), jnp.asarray(labels), C, N,
+                "dirichlet", S, alphas=(alpha,))
+            d = partition_label_distributions(part, jnp.asarray(labels), C)
+            ds.append(float(label_entropy(d).mean()))
+            # per-label totals are exact on both sides (completeness)
+            y_dev = np.asarray(labels)[np.asarray(part.idx)]
+            got = np.bincount(y_dev[np.asarray(part.mask) > 0],
+                              minlength=C)
+            np.testing.assert_array_equal(
+                got, np.bincount(labels, minlength=C))
+        assert abs(np.mean(hs) - np.mean(ds)) < tol, (alpha, hs, ds)
+
+
+def test_device_alpha_ordering():
+    labels = _labels(3, 6000)
+    ents = {}
+    for alpha in (0.01, 100.0):
+        part = partition_device(jax.random.PRNGKey(0), jnp.asarray(labels),
+                                C, 20, "dirichlet", 6000, alphas=(alpha,))
+        d = partition_label_distributions(part, jnp.asarray(labels), C)
+        ents[alpha] = float(label_entropy(d).mean())
+    assert ents[0.01] < ents[100.0] - 1.0
+
+
+def test_shards_label_limit():
+    labels = _labels(4, 2000)
+    L = 2
+    part = partition_device(jax.random.PRNGKey(1), jnp.asarray(labels),
+                            C, 10, "shards", 2000, labels_per_client=L)
+    idx, mask = np.asarray(part.idx), np.asarray(part.mask)
+    for k in range(10):
+        y = labels[idx[k][mask[k] > 0]]
+        # L shards, each straddling ≤ 2 label runs
+        assert len(np.unique(y)) <= 2 * L
+
+
+def test_iid_exactly_balanced():
+    part = partition_device(jax.random.PRNGKey(2),
+                            jnp.asarray(_labels(5, 1200)), C, 8, "iid",
+                            1200)
+    np.testing.assert_array_equal(np.asarray(part.counts),
+                                  np.full(8, 150))
+
+
+def test_quantity_skew_sizes():
+    labels = _labels(6, 4000)
+    iid = partition_device(jax.random.PRNGKey(0), jnp.asarray(labels),
+                           C, 16, "iid", 4000)
+    qty = partition_device(jax.random.PRNGKey(0), jnp.asarray(labels),
+                           C, 16, "quantity", 4000, beta=0.3)
+    assert np.asarray(qty.counts).std() > np.asarray(iid.counts).std() + 10
+    # labels stay ~IID per client: entropy close to the iid partition's
+    ei = float(label_entropy(
+        partition_label_distributions(iid, jnp.asarray(labels), C)).mean())
+    eq = float(label_entropy(
+        partition_label_distributions(qty, jnp.asarray(labels), C)).mean())
+    assert eq > ei - 0.35
+
+
+def test_partition_vmaps_over_keys():
+    """The whole point: a stack of keys yields a stack of partitions."""
+    labels = jnp.asarray(_labels(7, 500))
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(3))
+    parts = jax.vmap(lambda k: partition_device(
+        k, labels, C, 6, "dirichlet", 500, alphas=(0.1,)))(keys)
+    assert parts.idx.shape == (3, 6, 500)
+    for i in range(3):
+        _device_invariants(jax.tree_util.tree_map(lambda l: l[i], parts),
+                           500)
+    # different keys → different partitions
+    assert not np.array_equal(np.asarray(parts.counts[0]),
+                              np.asarray(parts.counts[1]))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_lookup_and_keys():
+    scn = get_scenario("mixed_80_20")
+    assert scn.kind == "multi_alpha" and len(scn.alphas) == 5
+    with pytest.raises(KeyError, match="unknown scenario"):
+        get_scenario("nope")
+    k1 = scenario_key(scn, 3)
+    k2 = scenario_key(scn, 3)
+    np.testing.assert_array_equal(np.asarray(k1), np.asarray(k2))
+    assert not np.array_equal(
+        np.asarray(scenario_key(scn, 4)), np.asarray(k1))
+    assert not np.array_equal(
+        np.asarray(scenario_key(get_scenario("dir_mild"), 3)),
+        np.asarray(k1))
+    # every registered scenario partitions cleanly
+    labels = jnp.asarray(_labels(8, 600))
+    for name, s in SCENARIOS.items():
+        part = s.partition(scenario_key(s, 0), labels, C, 6, 600)
+        _device_invariants(part, 600)
+        assert s.paper, f"{name} missing its paper mapping"
+
+
+# ---------------------------------------------------------------------------
+# availability
+# ---------------------------------------------------------------------------
+
+
+def test_availability_kinds():
+    always = get_scenario("dir_mild")
+    assert bool(availability_mask(always, 8, 0,
+                                  jax.random.PRNGKey(0)).all())
+    flaky = get_scenario("flaky_severe")
+    masks = [availability_mask(flaky, 200, t, jax.random.PRNGKey(t))
+             for t in range(5)]
+    frac = np.mean([float(m.mean()) for m in masks])
+    assert 0.6 < frac < 0.8                      # p = 0.3 dropout
+    assert not np.array_equal(np.asarray(masks[0]), np.asarray(masks[1]))
+    blocks = get_scenario("diurnal_mixed")
+    m = np.stack([np.asarray(availability_mask(
+        blocks, 8, t, jax.random.PRNGKey(0))) for t in range(8)])
+    assert m.shape == (8, 8)
+    np.testing.assert_array_equal(m[0], m[4])     # period 4
+    assert 0 < m.mean() < 1                       # some off, some on
+
+
+def test_replace_unavailable():
+    weights = jnp.ones(10) / 10
+    ids = jnp.asarray([0, 1, 2], jnp.int32)
+    avail = jnp.ones(10, bool).at[1].set(False)
+    out = np.asarray(replace_unavailable(jax.random.PRNGKey(0), ids,
+                                         avail, weights))
+    assert out[0] == 0 and out[2] == 2
+    assert out[1] not in (0, 1, 2) and bool(avail[out[1]])
+    # nobody available → picks kept rather than deadlocking
+    none = jnp.zeros(10, bool)
+    np.testing.assert_array_equal(
+        np.asarray(replace_unavailable(jax.random.PRNGKey(1), ids, none,
+                                       weights)), np.asarray(ids))
+
+
+def test_masked_select_respects_mask():
+    fn = make_functional("random", num_clients=12, num_select=4,
+                         total_rounds=10)
+    state = fn.init(jax.random.PRNGKey(0))
+    avail = jnp.zeros(12, bool).at[jnp.asarray([2, 5, 7, 9, 11])].set(True)
+    for t in range(6):
+        key = jax.random.PRNGKey(100 + t)
+        ids, state = masked_select(fn, state, t, key, avail,
+                                   jax.random.fold_in(key, 1))
+        picked = np.asarray(ids)
+        assert np.asarray(avail)[picked].all()
+        assert len(set(picked.tolist())) == 4
+    # weights restored, not persistently masked
+    np.testing.assert_allclose(np.asarray(state.weights),
+                               np.full(12, 1 / 12), atol=1e-6)
+
+
+def test_masked_select_keeps_replaced_clients_unseen():
+    """An offline client picked by HiCS's coverage sweep and swapped
+    out never trained — it must NOT be marked seen (else its all-zero
+    Δb row reads as maximal entropy for the rest of the run)."""
+    n, k = 8, 3
+    fn = make_functional("hics", num_clients=n, num_select=k,
+                         total_rounds=10, num_classes=4)
+    state = fn.init(jax.random.PRNGKey(0))
+    offline = 0
+    avail = jnp.ones(n, bool).at[offline].set(False)
+    seen_any_offline = False
+    for t in range(4):                       # sweep phase: ceil(8/3) rds
+        key = jax.random.PRNGKey(50 + t)
+        ids, state = masked_select(fn, state, t, key, avail,
+                                   jax.random.fold_in(key, 1))
+        picked = np.asarray(ids)
+        assert offline not in picked
+        seen_any_offline |= bool(np.asarray(state.seen)[offline])
+        # update marks exactly the actual participants
+        from repro.core import Observations
+        state = fn.update(state, t, ids, Observations(
+            bias_updates=jnp.ones((k, 4)) * 0.01))
+    assert not seen_any_offline
+    assert int(state.unseen_count) == 1      # only the offline client
+    # once it comes back online, the sweep picks it up
+    key = jax.random.PRNGKey(99)
+    ids, state = masked_select(fn, state, 4, key, jnp.ones(n, bool),
+                               jax.random.fold_in(key, 1))
+    assert offline in np.asarray(ids)

@@ -1,0 +1,161 @@
+"""Sweep engine acceptance: for a fixed key the vmapped multi-seed
+sweep reproduces the FederatedServer HOST loop seed-for-seed —
+identical participant sets, f32-tolerance accuracies — across ≥ 2
+scenarios; plus gating, availability, and trajectory checks."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import SyntheticSpec
+from repro.fed import LocalSpec
+from repro.scenarios import (SweepSpec, availability_mask, build_pair,
+                             get_scenario, run_host_reference, run_sweep,
+                             seed_keychain)
+
+SPEC = SweepSpec(
+    scenarios=("dir_mild", "mixed_80_20"), selectors=("hics", "random"),
+    seeds=(0, 1), num_clients=10, num_select=3, rounds=6,
+    samples_train=400, samples_test=120,
+    data=SyntheticSpec(dim=16, rank=2, noise=0.5),
+    local=LocalSpec(algo="fedavg", optimizer="sgd", lr=0.1, epochs=1,
+                    batch_size=32))
+
+
+@pytest.fixture(scope="module")
+def sweep_results():
+    return run_sweep(SPEC)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: vmapped == host loop, per seed, over ≥ 2 scenarios
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scenario", ["dir_mild", "mixed_80_20"])
+def test_vmapped_matches_host_loop(sweep_results, scenario):
+    cell = sweep_results["grid"][f"{scenario}/hics"]
+    for i, seed in enumerate(SPEC.seeds):
+        host = run_host_reference(SPEC, scenario, "hics", seed)
+        assert host["selected"] == cell["selected"][i].tolist(), \
+            f"participant sets diverged (scenario={scenario}, seed={seed})"
+        np.testing.assert_allclose(host["test_acc"][-1],
+                                   cell["final_acc"][i], atol=1e-5)
+        np.testing.assert_allclose(host["train_loss"],
+                                   cell["train_loss"][i], atol=1e-5)
+        # final-round mean estimated entropy agrees too
+        np.testing.assert_allclose(
+            np.mean(host["bias_entropy"][-1]),
+            cell["mean_entropy"][i][-1], atol=1e-4)
+
+
+def test_vmapped_matches_host_loop_random_selector(sweep_results):
+    cell = sweep_results["grid"]["dir_mild/random"]
+    host = run_host_reference(SPEC, "dir_mild", "random", 0)
+    assert host["selected"] == cell["selected"][0].tolist()
+
+
+def test_seeds_actually_differ(sweep_results):
+    cell = sweep_results["grid"]["dir_mild/hics"]
+    assert cell["selected"].shape == (2, SPEC.rounds, SPEC.num_select)
+    assert not np.array_equal(cell["selected"][0], cell["selected"][1])
+
+
+def test_trajectories_shape_and_finiteness(sweep_results):
+    for name, cell in sweep_results["grid"].items():
+        assert len(cell["acc_mean"]) == SPEC.rounds
+        assert len(cell["entropy_mean"]) == SPEC.rounds
+        assert np.isfinite(cell["acc_mean"]).all(), name
+        assert np.isfinite(cell["train_loss_mean"]).all(), name
+        assert 0.0 <= cell["final_acc_mean"] <= 1.0
+    hics = sweep_results["grid"]["dir_mild/hics"]
+    assert hics["entropy_mean"][-1] != 0.0     # Ĥ recorded post-sweep
+
+
+# ---------------------------------------------------------------------------
+# serial engine path + availability scenarios
+# ---------------------------------------------------------------------------
+
+
+def test_serial_engine_matches_vmapped_under_dropout():
+    spec = dataclasses.replace(SPEC, scenarios=("flaky_severe",),
+                               selectors=("hics",))
+    pair = build_pair(spec, "flaky_severe", "hics")
+    v = pair.vmapped()(pair.params0, pair.sstate0, pair.parts,
+                       pair.round_keys)
+    for i in range(len(spec.seeds)):
+        s = pair.serial()(*pair.seed_slice(i))
+        np.testing.assert_array_equal(np.asarray(v["selected"][i]),
+                                      np.asarray(s["selected"]))
+        np.testing.assert_allclose(np.asarray(v["test_acc"][i]),
+                                   np.asarray(s["test_acc"]), atol=1e-5)
+
+
+def test_dropout_sweep_selects_only_available():
+    spec = dataclasses.replace(SPEC, scenarios=("flaky_severe",),
+                               selectors=("random",))
+    pair = build_pair(spec, "flaky_severe", "random")
+    out = pair.vmapped()(pair.params0, pair.sstate0, pair.parts,
+                         pair.round_keys)
+    scn = get_scenario("flaky_severe")
+    for i, seed in enumerate(spec.seeds):
+        _, _, round_keys = seed_keychain(seed, spec.rounds)
+        for t in range(spec.rounds):
+            avail = np.asarray(availability_mask(
+                scn, spec.num_clients, t,
+                jax.random.fold_in(round_keys[t], 1)))
+            picked = np.asarray(out["selected"][i, t])
+            if avail.sum() >= spec.num_select:
+                assert avail[picked].all(), (seed, t, picked, avail)
+
+
+def test_host_reference_rejects_time_varying():
+    with pytest.raises(ValueError, match="availability"):
+        run_host_reference(SPEC, "flaky_severe", "hics", 0)
+
+
+# ---------------------------------------------------------------------------
+# gating + spec plumbing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("selector", ["cs", "divfl"])
+def test_full_update_selectors_rejected(selector):
+    with pytest.raises(ValueError, match="sweep engine"):
+        build_pair(SPEC, "dir_mild", selector)
+
+
+def test_stateful_local_algos_rejected():
+    spec = dataclasses.replace(
+        SPEC, local=LocalSpec(algo="feddyn", optimizer="sgd", lr=0.1,
+                              epochs=1, batch_size=32, mu=0.1))
+    with pytest.raises(ValueError, match="stateless"):
+        build_pair(spec, "dir_mild", "hics")
+
+
+def test_unknown_names_rejected():
+    with pytest.raises(KeyError, match="unknown selector"):
+        build_pair(SPEC, "dir_mild", "nope")
+    with pytest.raises(KeyError, match="unknown scenario"):
+        build_pair(SPEC, "nope", "hics")
+
+
+def test_capacity_default_and_override():
+    assert SPEC.capacity() == 4 * 400 // 10
+    assert dataclasses.replace(SPEC, cap=33).capacity() == 33
+    assert dataclasses.replace(
+        SPEC, num_clients=2).capacity() == 400      # clipped to S
+
+
+def test_loss_all_selector_runs_in_sweep():
+    """pow-d needs the per-round all-client loss poll on-device."""
+    spec = dataclasses.replace(SPEC, scenarios=("dir_mild",),
+                               selectors=("pow-d",), rounds=4)
+    res = run_sweep(spec)
+    cell = res["grid"]["dir_mild/pow-d"]
+    assert np.isfinite(cell["acc_mean"]).all()
+    host = run_host_reference(spec, "dir_mild", "pow-d", 0)
+    assert host["selected"] == cell["selected"][0].tolist()

@@ -113,6 +113,61 @@ def selection_step_comparison() -> dict:
     return out
 
 
+def incremental_vs_full(ns=(64, 256, 512), k: int = 10, c: int = 1024,
+                        repeats: int = 5) -> dict:
+    """Incremental K-row refresh vs from-scratch selection step.
+
+    Alg. 1 replaces K Δb rows per round; the cached path
+    (``hics_selection_step_cached``) recomputes only the K×N strip and
+    re-symmetrizes — O(K·N·C) per round against the full step's
+    O(N²·C).  Timed per-round at steady state (compile excluded), both
+    on the CPU oracle backend like the fused-vs-unfused entry; the TPU
+    path swaps in the Pallas strip kernel.  Lands in
+    ``BENCH_selection.json`` so the speedup trajectory is tracked per
+    PR (acceptance floor: ≥2× at N=512, K=10)."""
+    import jax.numpy as jnp
+    from repro.kernels import (hics_selection_step,
+                               hics_selection_step_cached)
+
+    rng = np.random.default_rng(0)
+    out: dict = {"k": k, "c": c}
+    for n in ns:
+        x = jnp.asarray(rng.normal(size=(n, c)) * 0.01, jnp.float32)
+        # warm, fully-refreshed cache (what a steady-state round sees)
+        _, dist, stats = hics_selection_step_cached(
+            x, jnp.zeros((n, n)), jnp.zeros((n, 2)),
+            jnp.arange(n, dtype=jnp.int32), 0.0025, lam=10.0,
+            use_pallas=False)
+        ids = jnp.asarray(rng.choice(n, size=k, replace=False),
+                          jnp.int32)
+
+        def full():
+            return hics_selection_step(x, 0.0025, lam=10.0,
+                                       use_pallas=False)
+
+        def incremental():
+            return hics_selection_step_cached(x, dist, stats, ids,
+                                              0.0025, lam=10.0,
+                                              use_pallas=False)
+
+        full()[1].block_until_ready()           # compile both paths
+        incremental()[1].block_until_ready()
+        t_f = t_i = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            full()[1].block_until_ready()
+            t_f = min(t_f, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            incremental()[1].block_until_ready()
+            t_i = min(t_i, time.perf_counter() - t0)
+        out[f"N={n}"] = {"full_seconds": t_f, "incremental_seconds": t_i,
+                         "speedup": t_f / t_i}
+        print(f"  selection N={n:4d} K={k} C={c}: full {t_f*1e3:8.2f} ms"
+              f"  incremental {t_i*1e3:8.2f} ms  ({t_f/t_i:.2f}x)",
+              flush=True)
+    return out
+
+
 def clustering_scaling(ns=(64, 256, 512), repeats: int = 3) -> dict:
     """``agglomerate_device`` (naive O(N³), on-device) vs the numpy
     lazy-min-cache ``agglomerate`` (amortized O(N²)) — the clustering
@@ -127,7 +182,10 @@ def clustering_scaling(ns=(64, 256, 512), repeats: int = 3) -> dict:
     for n in ns:
         x = rng.normal(size=(n, 8))
         dist = np.sqrt(((x[:, None] - x[None, :]) ** 2).sum(-1))
-        dev = jax.jit(lambda d: agglomerate_device(d, 8))
+        # the selection path hands over an exactly-symmetric matrix, so
+        # the bench exercises the same precomputed fast path it uses
+        dev = jax.jit(lambda d: agglomerate_device(d, 8,
+                                                   precomputed=True))
         dev(jnp.asarray(dist)).block_until_ready()      # compile
         t_dev = t_np = float("inf")
         for _ in range(repeats):
@@ -135,7 +193,7 @@ def clustering_scaling(ns=(64, 256, 512), repeats: int = 3) -> dict:
             dev(jnp.asarray(dist)).block_until_ready()
             t_dev = min(t_dev, time.perf_counter() - t0)
             t0 = time.perf_counter()
-            agglomerate(dist, 8)
+            agglomerate(dist, 8, precomputed=True)
             t_np = min(t_np, time.perf_counter() - t0)
         out[f"N={n}"] = {"device_seconds": t_dev, "numpy_seconds": t_np,
                          "device_over_numpy": t_dev / t_np}
@@ -149,6 +207,8 @@ def main(quick: bool = True):
     res = run()
     sel = selection_step_comparison()
     res["selection_step"] = sel
+    ivf = incremental_vs_full()
+    res["incremental_vs_full"] = ivf
     clus = clustering_scaling()
     res["clustering_scaling"] = clus
     save_result("table3_overhead", res)
@@ -158,6 +218,7 @@ def main(quick: bool = True):
                 "backend; TPU path is the Pallas kernel pipeline)",
         "pre_gram_hbm_sweeps": {"fused": 1, "unfused": 3},
         "results": sel,
+        "incremental_vs_full": ivf,
         "clustering_scaling": clus,
     }, indent=1))
     print(f"  wrote {REPO_ROOT / 'BENCH_selection.json'}", flush=True)

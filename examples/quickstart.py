@@ -68,6 +68,7 @@ def main():
           f" total across {ROUNDS} rounds (O(C) server-side)")
 
     selector_api_tour()
+    incremental_selection_tour()
     scenario_sweep_tour()
 
 
@@ -112,6 +113,46 @@ def selector_api_tour():
     print("state pytree leaves:",
           [tuple(l.shape) for l in jax.tree_util.tree_leaves(state)][:5],
           "...")
+
+
+def incremental_selection_tour():
+    """Incremental selection: cached Gram/distance state, K-row updates.
+
+    Algorithm 1 replaces only the K participants' Δb rows per round, so
+    the N−K other rows of the Eq. 9 distance matrix carry over.  The
+    HiCS selector caches that matrix (plus per-row [norm, Ĥ] stats and
+    the staled ids) inside its ``SelectorState``, and each ``select``
+    refreshes just the K×N strip — O(K·N·C) per round instead of the
+    from-scratch O(N²·C) — via ``repro.kernels.hics_selection_step_
+    cached`` (MXU-tiled Pallas strip kernel on TPU, jitted oracle on
+    CPU).  It is ON by default; ``incremental=False`` restores the
+    from-scratch step, and tests/test_incremental_selection.py pins the
+    two to identical participant sets over 50-round host / scanned /
+    vmapped-sweep runs.  Because the cache is ordinary state-pytree
+    data, it rides ``lax.scan`` round loops and the sweep engine's seed
+    axis for free; ``BENCH_selection.json`` ("incremental_vs_full")
+    tracks the measured speedup per PR.
+    """
+    print("\n=== incremental selection: K-row cache refresh ===")
+    n, k, rounds = 12, 3, 8
+    dbs = np.random.default_rng(0).normal(0.0, 0.02, (n, 10))
+    picks = {}
+    for inc in (True, False):
+        fn = make_functional("hics", num_clients=n, num_select=k,
+                             total_rounds=rounds, num_classes=10,
+                             incremental=inc)
+        state = fn.init(jax.random.PRNGKey(7))
+        key = jax.random.PRNGKey(0)
+        out = []
+        for t in range(rounds):
+            key, kt = jax.random.split(key)
+            ids, state = fn.select(state, t, kt)
+            out.append([int(i) for i in ids])
+            state = fn.update(state, t, ids, Observations(
+                bias_updates=jnp.asarray(dbs)[ids]))
+        picks[inc] = out
+    print("cached (N,N) distance + (N,2) stats ride the state pytree;"
+          f" parity with from-scratch: {picks[True] == picks[False]}")
 
 
 def scenario_sweep_tour():

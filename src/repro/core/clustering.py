@@ -31,12 +31,17 @@ _LINKAGES = ("ward", "average", "complete", "single")
 
 
 def agglomerate(dist: np.ndarray, num_clusters: int,
-                linkage: str = "ward") -> np.ndarray:
+                linkage: str = "ward",
+                precomputed: bool = False) -> np.ndarray:
     """Cluster N items into ``num_clusters`` groups.
 
     dist: (N, N) symmetric distance matrix (diagonal ignored).
     Returns integer labels (N,) in [0, num_clusters), relabelled by
-    first appearance for determinism.
+    first appearance for determinism.  ``precomputed=True`` promises an
+    already exactly-symmetric matrix (e.g. the incremental selection
+    cache, or a kernel-produced Eq. 9 matrix) and skips the defensive
+    ``0.5·(d + dᵀ)`` pass — a numerical no-op on symmetric input, so
+    labels are identical either way.
     """
     if linkage not in _LINKAGES:
         raise ValueError(f"linkage must be one of {_LINKAGES}")
@@ -48,7 +53,8 @@ def agglomerate(dist: np.ndarray, num_clusters: int,
     # Work on a copy with +inf diagonal; ward operates on squared dists
     # (Lance–Williams ward update is exact in d² space).
     d = np.array(dist, dtype=np.float64)
-    d = 0.5 * (d + d.T)
+    if not precomputed:
+        d = 0.5 * (d + d.T)
     if linkage == "ward":
         d = d ** 2
     np.fill_diagonal(d, np.inf)
@@ -131,7 +137,8 @@ def agglomerate(dist: np.ndarray, num_clusters: int,
 
 
 def agglomerate_device(dist: jnp.ndarray, num_clusters: int,
-                       linkage: str = "ward") -> jnp.ndarray:
+                       linkage: str = "ward",
+                       precomputed: bool = False) -> jnp.ndarray:
     """Pure-jax agglomerative clustering — jit/scan/vmap-compatible.
 
     Same Lance–Williams semantics as :func:`agglomerate` (ward on
@@ -145,13 +152,21 @@ def agglomerate_device(dist: jnp.ndarray, num_clusters: int,
     computes with static shapes.  O(N³) worst case versus the numpy
     version's amortized O(N²), but it runs on-device inside the jitted
     round loop (N ≤ a few thousand in any selection scenario).
+
+    ``precomputed=True`` is the fast path for callers holding an
+    already exactly-symmetric distance — the incremental selection
+    cache and the fused Eq. 9 kernels both produce one — skipping the
+    defensive ``0.5·(d + dᵀ)`` sweep over (N, N).  On symmetric input
+    ``0.5·(x + x)`` is bit-exact ``x`` in f32, so the flag can never
+    change labels; it only removes work.
     """
     if linkage not in _LINKAGES:
         raise ValueError(f"linkage must be one of {_LINKAGES}")
     n = dist.shape[0]
     num_clusters = max(1, min(int(num_clusters), n))
     d = jnp.asarray(dist, jnp.float32)
-    d = 0.5 * (d + d.T)
+    if not precomputed:
+        d = 0.5 * (d + d.T)
     if linkage == "ward":
         d = d * d
     d = jnp.where(jnp.eye(n, dtype=bool), jnp.inf, d)

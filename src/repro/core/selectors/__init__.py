@@ -40,11 +40,14 @@ bookkeeping behind the Table 3 overhead comparison:
     fedcor   : losses of ALL clients in the warm-up stage (GP fit)
     hics     : bias updates of participants        (O(C) — the paper)
 
-HiCS-FL's O(C) hot path (entropy + norms + pairwise Eq. 9) is one
-fused, jitted selection step (``repro.kernels.hics_selection_step``) —
-a single pre-Gram HBM sweep over (N, C), Pallas on TPU — followed by
-on-device clustering (``agglomerate_device``) and Gumbel two-stage
-sampling (``hierarchical_sample_device``).
+HiCS-FL's O(C) hot path (entropy + norms + pairwise Eq. 9) is
+INCREMENTAL by default: the state carries a cached distance matrix and
+``select`` refreshes only the K rows the last ``update`` replaced
+(``repro.kernels.hics_selection_step_cached`` — O(K·N·C) per round;
+``incremental=False`` restores the from-scratch fused step
+``hics_selection_step``, O(N²·C)), followed by on-device clustering
+(``agglomerate_device``, ``precomputed=True`` fast path) and Gumbel
+two-stage sampling (``hierarchical_sample_device``).
 """
 from repro.core.selectors.base import ClientSelector
 from repro.core.selectors.baselines import (ClusteredSamplingSelector,

@@ -55,6 +55,12 @@ class ClientSelector:
         self._update_jit = jax.jit(self.fn.update)
         self.select_seconds = 0.0      # cumulative selection compute time
         self.update_seconds = 0.0
+        # incremental-cache hazard tracking: a (K,)-sized staleness
+        # buffer only remembers ONE update's ids, so two updates
+        # without an intervening select would silently leave the first
+        # cohort's cached rows stale — fail fast instead (host-side
+        # only; the raw functional API documents the same contract)
+        self._refresh_pending = False
 
     # -- functional factory (override) ---------------------------------------
     def _make_functional(self, **kw) -> FunctionalSelector:
@@ -69,6 +75,7 @@ class ClientSelector:
         if key is None:
             self._key, key = jax.random.split(self._key)
         ids, self.state = self._select_jit(self.state, t, key)
+        self._refresh_pending = False      # select refreshed the cache
         out = [int(i) for i in np.asarray(ids)]
         self.select_seconds += time.perf_counter() - t0
         return out
@@ -95,6 +102,16 @@ class ClientSelector:
                 losses=jnp.asarray(losses, jnp.float32)
                 if losses is not None and "loss_all" in req else None)
         ids = jnp.asarray(list(selected), jnp.int32)
+        if obs.bias_updates is not None and self.state.stale_ids.shape[0]:
+            if self._refresh_pending:
+                raise RuntimeError(
+                    f"{self.name}: update() called twice without an "
+                    "intervening select() — the incremental cache's "
+                    "staleness buffer only covers the LAST update's "
+                    "rows, so the earlier cohort would stay stale. "
+                    "Call select() between updates, or construct the "
+                    "selector with incremental=False.")
+            self._refresh_pending = True
         self.state = self._ensure_dims(self.state, obs)
         self.state = self._update_jit(self.state, t, ids, obs)
         self.update_seconds += time.perf_counter() - t0

@@ -122,7 +122,9 @@ def cs_functional(num_clients: int, num_select: int, total_rounds: int,
             cos = jnp.clip(unit @ unit.T, -1.0 + 1e-7, 1.0 - 1e-7)
             ang = jnp.arccos(cos)
             ang = jnp.where(jnp.eye(n, dtype=bool), 0.0, ang)
-            labels = agglomerate_device(ang, k, linkage="ward")
+            # exactly symmetric by construction — skip re-symmetrizing
+            labels = agglomerate_device(ang, k, linkage="ward",
+                                        precomputed=True)
             # one client per cluster, ∝ p_k within the cluster
             logw = jnp.log(jnp.clip(state.weights, _LOG_FLOOR, None))
             logit = jnp.where(labels[None, :] == jnp.arange(k)[:, None],

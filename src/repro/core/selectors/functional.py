@@ -67,6 +67,15 @@ class SelectorState(NamedTuple):
     losses: jnp.ndarray       # (N,) latest loss poll
     loss_hist: jnp.ndarray    # (H, N) loss-history ring (newest last)
     hist_count: jnp.ndarray   # () int32 — observations received
+    # --- incremental-selection cache (hics incremental=True; width 0
+    # otherwise).  Alg. 1 replaces K Δb rows per round, so the Eq. 9
+    # distance and the per-row [norm, Ĥ] stats are cached and only the
+    # refreshed rows recomputed (O(K·N·C) vs O(N²·C) per round).
+    dist_cache: jnp.ndarray   # (N, N) cached Eq. 9 distance (or (N, 0))
+    row_stats: jnp.ndarray    # (N, 2) cached [L2 norm, Ĥ] (or (N, 0))
+    # per-client staleness: the ids whose Δb rows `update` last wrote
+    # and the next `select` must refresh.  (K,) int32, or (0,).
+    stale_ids: jnp.ndarray
 
 
 class FunctionalSelector(NamedTuple):
@@ -83,8 +92,17 @@ class FunctionalSelector(NamedTuple):
 
 def init_state(key: jax.Array, num_clients: int, weights=None,
                num_classes: int = 0, feat_dim: int = 0,
-               hist_len: int = 0) -> SelectorState:
-    """Allocate a fresh :class:`SelectorState` with the given widths."""
+               hist_len: int = 0, dist_cache: bool = False,
+               stale_len: int = 0) -> SelectorState:
+    """Allocate a fresh :class:`SelectorState` with the given widths.
+
+    ``dist_cache=True`` sizes the incremental-selection cache — an
+    (N, N) distance matrix plus (N, 2) row stats — and ``stale_len``
+    the staleness index buffer (the selector's K).  The cache starts at
+    zero: every entry is rewritten by a K-row refresh before the first
+    clustered selection reads it (a client only leaves the coverage
+    pool by participating, which stales — then refreshes — its rows).
+    """
     n = int(num_clients)
     w = (jnp.ones(n, jnp.float32) if weights is None
          else jnp.asarray(weights, jnp.float32))
@@ -99,6 +117,9 @@ def init_state(key: jax.Array, num_clients: int, weights=None,
         losses=jnp.zeros(n, jnp.float32),
         loss_hist=jnp.zeros((int(hist_len), n), jnp.float32),
         hist_count=jnp.int32(0),
+        dist_cache=jnp.zeros((n, n if dist_cache else 0), jnp.float32),
+        row_stats=jnp.zeros((n, 2 if dist_cache else 0), jnp.float32),
+        stale_ids=jnp.zeros(int(stale_len), jnp.int32),
     )
 
 

@@ -1,13 +1,31 @@
 """HiCS-FL (Algorithm 1) as a functional triple + its OO shim.
 
 Rounds with a non-empty coverage pool: random sweep without
-replacement (S₀, Alg. 1 lines 14-15).  Afterwards: one fused device
-step (``repro.kernels.hics_selection_step``) produces Ĥ and the Eq. 9
-distance in a single pre-Gram HBM sweep over (N, C); agglomerative
-clustering into M = K groups and the two-stage Eq. 10 sampler then run
-on-device too (``agglomerate_device`` / ``hierarchical_sample_device``)
-so ``select`` is one jit-compatible function with no host round trip —
-the piece that makes the fully-scanned server round loop possible.
+replacement (S₀, Alg. 1 lines 14-15).  Afterwards: agglomerative
+clustering into M = K groups on the Eq. 9 distance and the two-stage
+Eq. 10 sampler, all on-device (``agglomerate_device`` /
+``hierarchical_sample_device``), so ``select`` is one jit-compatible
+function with no host round trip — the piece that makes the fully
+scanned server round loop possible.
+
+Two distance paths feed the clustering:
+
+* ``incremental=True`` (default) — Alg. 1 line 17 replaces only the K
+  participants' Δb rows per round, so the state carries a cached
+  (N, N) distance + (N, 2) [norm, Ĥ] stats and ``select`` starts by
+  refreshing just the rows ``update`` staled
+  (``repro.kernels.hics_selection_step_cached``): O(K·N·C) per round.
+* ``incremental=False`` — the from-scratch fused device step
+  (``repro.kernels.hics_selection_step``): one pre-Gram HBM sweep over
+  (N, C) into the MXU-tiled Gram/arccos kernel, O(N²·C) per round.
+  Kept as the parity oracle (tests/test_incremental_selection.py locks
+  the two paths together) and for drivers that mutate Δb out-of-band.
+
+The cache refresh runs at the top of EVERY select — including coverage
+-sweep rounds — because staleness metadata only remembers the last
+``update``'s ids; refreshing an already-fresh row is idempotent, so
+the strict select→update alternation every driver uses keeps the
+cache exact.  (Contract: at most one ``update`` between ``select``s.)
 """
 from __future__ import annotations
 
@@ -24,7 +42,7 @@ from repro.core.selectors.base import ClientSelector
 from repro.core.selectors.functional import (FunctionalSelector,
                                              Observations, SelectorState,
                                              init_state, mark_seen, take_key)
-from repro.kernels import hics_selection_step
+from repro.kernels import hics_selection_step, hics_selection_step_cached
 
 REQUIRES = frozenset({"bias_sel"})
 
@@ -35,6 +53,7 @@ def hics_functional(num_clients: int, num_select: int, total_rounds: int,
                     num_clusters: Optional[int] = None,
                     linkage: str = "ward", normalize: bool = False,
                     gram_in_bf16: bool = False, num_classes: int = 1,
+                    incremental: bool = True,
                     **_kw) -> FunctionalSelector:
     n = int(num_clients)
     k = min(int(num_select), n)
@@ -43,22 +62,40 @@ def hics_functional(num_clients: int, num_select: int, total_rounds: int,
     lam, gamma0 = float(lam), float(gamma0)
     tr = float(total_rounds)
     num_classes = max(1, int(num_classes))
+    incremental = bool(incremental)
 
     def init(key) -> SelectorState:
-        return init_state(key, n, weights, num_classes=num_classes)
+        return init_state(key, n, weights, num_classes=num_classes,
+                          dist_cache=incremental,
+                          stale_len=k if incremental else 0)
 
     def select(state: SelectorState, t, key=None):
         state, key = take_key(state, key)
+
+        if incremental:
+            # K-row refresh of the cached distance/stats (idempotent on
+            # fresh rows) — the only Δb-dependent compute of the round
+            _, dist_c, stats_c = hics_selection_step_cached(
+                state.delta_b, state.dist_cache, state.row_stats,
+                state.stale_ids, temperature, lam=lam,
+                normalize=normalize, gram_in_bf16=gram_in_bf16)
+            state = state._replace(dist_cache=dist_c, row_stats=stats_c)
 
         def sweep(key):
             ids = coverage_sweep_device(key, state.seen, k)
             return ids, state.seen.at[ids].set(True)
 
         def clustered(key):
-            ent, dist = hics_selection_step(
-                state.delta_b, temperature, lam=lam,
-                normalize=normalize, gram_in_bf16=gram_in_bf16)
-            labels = agglomerate_device(dist, m, linkage=linkage)
+            if incremental:
+                ent, dist = state.row_stats[:, 1], state.dist_cache
+            else:
+                ent, dist = hics_selection_step(
+                    state.delta_b, temperature, lam=lam,
+                    normalize=normalize, gram_in_bf16=gram_in_bf16)
+            # the cache scatter (and the fused kernel) keep the matrix
+            # exactly symmetric, so clustering may skip re-symmetrizing
+            labels = agglomerate_device(dist, m, linkage=linkage,
+                                        precomputed=True)
             means = cluster_means_device(ent, labels, m)
             gamma_t = anneal_device(gamma0, t, tr)
             ids = hierarchical_sample_device(
@@ -79,6 +116,24 @@ def hics_functional(num_clients: int, num_select: int, total_rounds: int,
             jnp.asarray(obs.bias_updates, state.delta_b.dtype))
         state = mark_seen(state._replace(
             delta_b=db, hist_count=state.hist_count + 1), ids)
+        if incremental:
+            # stale the replaced rows; the next select refreshes them.
+            # The buffer is fixed at (K,): shorter id lists pad by
+            # repeating the last id (an idempotent extra refresh).
+            ids_arr = jnp.asarray(ids, jnp.int32).reshape(-1)
+            kk = ids_arr.shape[0]
+            if kk > k:
+                raise ValueError(
+                    f"incremental hics can refresh at most K={k} rows "
+                    f"per round, got {kk} updated ids")
+            if kk == k:
+                stale = ids_arr
+            elif kk == 0:      # no new rows — keep pending staleness
+                stale = state.stale_ids
+            else:
+                stale = jnp.concatenate(
+                    [ids_arr, jnp.broadcast_to(ids_arr[-1:], (k - kk,))])
+            state = state._replace(stale_ids=stale)
         return state
 
     def entropies(state: SelectorState) -> jnp.ndarray:

@@ -22,6 +22,12 @@ Two drivers over the same functional selector core:
     between ``select`` and ``update``.  Both paths consume the same
     PRNG-key chain, so they produce identical participant sets.
 
+The selector state is an opaque pytree in both drivers, so selector-
+side caches — e.g. incremental HiCS's (N, N) distance cache with K-row
+staleness (PR 4) — ride the scan carry and the host-loop shim without
+any server-side wiring; tests/test_incremental_selection.py pins the
+three drivers to identical 50-round participant sets either way.
+
 History records per-round train loss / selected ids / Δb-derived
 entropies and periodic test accuracy — everything the paper's
 figures/tables need.

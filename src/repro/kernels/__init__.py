@@ -2,6 +2,9 @@
 
   fused_stats      — single-sweep entropy + L2 norm + RMS over (N, C)
                      (the pre-Gram stage of the HiCS selection step)
+  gram_update      — K-row incremental refresh of the cached Eq. 9
+                     distance (Alg. 1 replaces K Δb rows per round, so
+                     the strip is O(K·N·C) vs the full step's O(N²·C))
   hetero_entropy   — fused temperature-softmax entropy over class blocks
                      (entropy-only API; fused_stats supersedes it on the
                      selection path)
@@ -20,9 +23,12 @@ the device half of the functional selector protocol
 the next selection.
 """
 from repro.kernels.ops import (estimate_entropies, fused_row_stats,
-                               gqa_decode_attention, hics_selection_step,
+                               gqa_decode_attention, gram_row_update,
+                               hics_selection_step,
+                               hics_selection_step_cached,
                                pairwise_distances)
 
 __all__ = ["estimate_entropies", "fused_row_stats",
-           "gqa_decode_attention", "hics_selection_step",
+           "gqa_decode_attention", "gram_row_update",
+           "hics_selection_step", "hics_selection_step_cached",
            "pairwise_distances"]

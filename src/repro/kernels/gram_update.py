@@ -1,0 +1,213 @@
+"""Pallas TPU kernel: K-row incremental update of the Eq. 9 distance.
+
+HiCS-FL's Algorithm 1 replaces only the K participating clients' Δb
+rows each round, so N−K rows of the Gram/arccos distance matrix carry
+over round-to-round.  This module is the device half of that caching
+scheme: instead of the full (N, N) Gram product — O(N²·C) HBM traffic
+and MXU work per round — it recomputes just the K×N strip
+
+    D[u, j] = arccos( <Δb_u, Δb_j> / (|Δb_u||Δb_j|) ) + λ |Ĥ_u − Ĥ_j|
+
+for the refreshed rows u ∈ ids, O(K·N·C), and scatters it back into
+the cached matrix (rows AND columns — dot products are symmetric, so
+the scatter keeps the cache exactly symmetric).
+
+The strip kernel reuses the Gram tiling of ``kernels/pairwise``: (BK,
+BC) × (BN, BC) partial products accumulated in a VMEM f32 scratch over
+the sequential C axis, with the normalize→clip→arccos→+λ|ΔĤ| epilogue
+applied on the last C block so the strip is written to HBM exactly
+once.  ``gram_in_bf16`` casts both Gram operands to bf16 (f32
+accumulation stays) for 2× operand bandwidth, exactly like the full
+kernel.  The true diagonal is zeroed via the refreshed rows' GLOBAL
+indices, which ride along as a (K, 1) int32 operand.
+
+``cached_selection_step_pallas`` is the end-to-end incremental
+selection step: gather the K rows, one fused-stats sweep over (K, C)
+(entropy + L2 norm, plus the RMS-normalized second sweep when
+``normalize=True``), the strip kernel, and the row/col scatter — all
+inside one jit.  Grid: (K tiles, N tiles, C blocks); C minor.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.fused_stats import _fused_stats_padded
+from repro.kernels.pairwise import _gram_blocks
+
+
+def _gram_row_kernel(rows_ref, x_ref, stats_r_ref, stats_c_ref, ids_ref,
+                     o_ref, acc_ref, *, lam, eps, block_n):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+    j = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = rows_ref[...].astype(jnp.float32)     # (BK, BC) refreshed rows
+    b = x_ref[...].astype(jnp.float32)        # (BN, BC) all-clients tile
+    acc_ref[...] += jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ci == nc - 1)
+    def _epilogue():
+        # stats lanes: [:, 0] = L2 norm, [:, 1] = entropy
+        nr = stats_r_ref[..., 0:1].astype(jnp.float32)    # (BK, 1)
+        ncol = stats_c_ref[..., 0:1].astype(jnp.float32)  # (BN, 1)
+        denom = jnp.maximum(nr, eps) * jnp.maximum(ncol, eps).T
+        cos = acc_ref[...] / denom
+        cos = jnp.clip(cos, -1.0 + 1e-7, 1.0 - 1e-7)
+        ang = jnp.arccos(cos)
+        # zero the TRUE diagonal: the strip row's global client index
+        # (ids operand) against the tile's global column range
+        row_id = ids_ref[..., 0:1]                        # (BK, 1) int32
+        col = j * block_n + jax.lax.broadcasted_iota(jnp.int32, ang.shape,
+                                                     1)
+        ang = jnp.where(row_id == col, 0.0, ang)
+        hr = stats_r_ref[..., 1:2].astype(jnp.float32)    # (BK, 1)
+        hc = stats_c_ref[..., 1:2].astype(jnp.float32)    # (BN, 1)
+        o_ref[...] = ang + lam * jnp.abs(hr - hc.T)
+
+
+def _gram_rows_padded(rows: jnp.ndarray, x: jnp.ndarray,
+                      stats_rows: jnp.ndarray, stats_all: jnp.ndarray,
+                      row_ids: jnp.ndarray, lam: float, eps: float,
+                      bk: int, bn: int, block_c: int,
+                      interpret: bool) -> jnp.ndarray:
+    """Strip kernel on already padded buffers.
+
+    rows (k_pad, c_pad), x (n_pad, c_pad), stats (k_pad, 2)/(n_pad, 2)
+    with nonzero norms on padded entries, row_ids (k_pad, 1) int32 with
+    -1 on padded entries (never matches a live column).
+    """
+    k_pad, c_pad = rows.shape
+    n_pad = x.shape[0]
+    grid = (k_pad // bk, n_pad // bn, c_pad // block_c)
+    return pl.pallas_call(
+        functools.partial(_gram_row_kernel, lam=lam, eps=eps,
+                          block_n=bn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, block_c), lambda i, j, k: (i, k)),  # rows
+            pl.BlockSpec((bn, block_c), lambda i, j, k: (j, k)),  # cols
+            pl.BlockSpec((bk, 2), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bn, 2), lambda i, j, k: (j, 0)),
+            pl.BlockSpec((bk, 1), lambda i, j, k: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bk, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k_pad, n_pad), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bk, bn), jnp.float32)],
+        interpret=interpret,
+    )(rows, x, stats_rows, stats_all, row_ids)
+
+
+_BK = 8   # strip row-tile: K is small (a cohort), one VPU sublane tile
+
+
+def _strip_operands(x_pad: jnp.ndarray, stats: jnp.ndarray,
+                    ids: jnp.ndarray, n: int, gram_in_bf16: bool):
+    """Padded/aligned operands for the strip kernel, shared by both
+    entry points so their invariants cannot drift: padded stats lanes
+    carry norm 1 (never divide by eps²), padded row ids carry -1
+    (never matches a live column), and the bf16 cast happens AFTER any
+    f32 consumer of the buffers.  Returns (rows, x, stats_rows,
+    stats_all, row_ids, k_pad)."""
+    n_pad = x_pad.shape[0]
+    k = ids.shape[0]
+    k_pad = max(_BK, -(-k // _BK) * _BK)
+    rows = jnp.pad(x_pad[ids], ((0, k_pad - k), (0, 0)))
+    live = jnp.arange(n_pad) < n
+    stats_all = jnp.stack(
+        [jnp.where(live, jnp.pad(stats[:, 0], (0, n_pad - n)), 1.0),
+         jnp.pad(stats[:, 1], (0, n_pad - n))], axis=-1)
+    stats_rows = jnp.pad(stats[ids], ((0, k_pad - k), (0, 0)),
+                         constant_values=1.0)
+    row_ids = jnp.pad(ids.astype(jnp.int32), (0, k_pad - k),
+                      constant_values=-1)[:, None]
+    if gram_in_bf16:
+        x_pad = x_pad.astype(jnp.bfloat16)
+        rows = rows.astype(jnp.bfloat16)
+    return rows, x_pad, stats_rows, stats_all, row_ids, k_pad
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("lam", "block_n", "block_c",
+                                    "gram_in_bf16", "interpret"))
+def gram_row_update_pallas(updates: jnp.ndarray, stats: jnp.ndarray,
+                           ids: jnp.ndarray, lam: float = 10.0,
+                           block_n: int = 128, block_c: int = 512,
+                           gram_in_bf16: bool = False,
+                           interpret: bool = True) -> jnp.ndarray:
+    """(N, C), (N, 2) stats, (K,) ids -> (K, N) Eq. 9 distance strip.
+
+    ``stats`` must already hold the CURRENT [norm, Ĥ] of every row
+    (including the refreshed ones); this is just the tiled strip
+    product + epilogue.  ``cached_selection_step_pallas`` wraps it with
+    the stats refresh and the cache scatter.
+    """
+    n, c = updates.shape
+    k = ids.shape[0]
+    bn, n_pad, c_pad = _gram_blocks(n, c, block_n, block_c)
+    x = jnp.pad(updates.astype(jnp.float32), ((0, n_pad - n),
+                                              (0, c_pad - c)))
+    rows, x, stats_rows, stats_all, row_ids, _ = _strip_operands(
+        x, stats, ids, n, gram_in_bf16)
+    strip = _gram_rows_padded(rows, x, stats_rows, stats_all, row_ids,
+                              lam, 1e-8, _BK, bn, block_c, interpret)
+    return strip[:k, :n]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("temperature", "lam", "normalize",
+                                    "block_n", "block_c", "gram_in_bf16",
+                                    "interpret"))
+def cached_selection_step_pallas(updates: jnp.ndarray, dist: jnp.ndarray,
+                                 stats: jnp.ndarray, ids: jnp.ndarray,
+                                 temperature: float, lam: float = 10.0,
+                                 normalize: bool = False,
+                                 block_n: int = 128, block_c: int = 512,
+                                 gram_in_bf16: bool = False,
+                                 interpret: bool = True):
+    """Incremental HiCS selection step, kernel path.
+
+    (N, C) Δb + cached (dist (N, N), stats (N, 2)) + (K,) refreshed ids
+    -> (Ĥ (N,), dist, stats) with rows/cols of ``ids`` recomputed and
+    re-symmetrized — O(K·N·C) instead of O(N²·C).  Same epilogue
+    arithmetic as ``hics_selection_step_pallas`` (dot-then-divide
+    cosine, f32 accumulation), so cached and from-scratch kernels agree
+    row-for-row.  K = 0 returns the cache unchanged.
+    """
+    n, c = updates.shape
+    k = ids.shape[0]
+    if k == 0:
+        return stats[:, 1], dist, stats
+    bn, n_pad, c_pad = _gram_blocks(n, c, block_n, block_c)
+    k_pad = max(_BK, -(-k // _BK) * _BK)
+    x = jnp.pad(updates.astype(jnp.float32), ((0, n_pad - n),
+                                              (0, c_pad - c)))
+    rows_f32 = jnp.pad(x[ids], ((0, k_pad - k), (0, 0)))  # (k_pad, c_pad)
+    inv_t = jnp.full((k_pad, 1), 1.0 / temperature, jnp.float32)
+    ent_r, norm_r, rms_r = _fused_stats_padded(rows_f32, inv_t, c, 8,
+                                               block_c, interpret)
+    if normalize:
+        scale = 1.0 / (jnp.clip(rms_r, 1e-12, None)[:, None]
+                       * temperature)
+        ent_r, _, _ = _fused_stats_padded(rows_f32, scale, c, 8,
+                                          block_c, interpret)
+    stats = stats.at[ids].set(
+        jnp.stack([norm_r[:k], ent_r[:k]], axis=-1))
+    rows, xg, stats_rows, stats_all, row_ids, _ = _strip_operands(
+        x, stats, ids, n, gram_in_bf16)
+    strip = _gram_rows_padded(rows, xg, stats_rows, stats_all, row_ids,
+                              lam, 1e-8, _BK, bn, block_c,
+                              interpret)[:k, :n]
+    dist = dist.at[ids].set(strip)
+    dist = dist.at[:, ids].set(strip.T)
+    return stats[:, 1], dist, stats

@@ -6,6 +6,8 @@ paths are bit-for-bit validated against ``ref.py`` by the test suite.
 
     estimate_entropies(updates, T)          (N, C) -> (N,)
     hics_selection_step(updates, T, lam)    (N, C) -> ((N,), (N, N))
+    hics_selection_step_cached(...)         K-row incremental refresh
+    gram_row_update(updates, stats, ids)    (K, N) Eq. 9 distance strip
     pairwise_distances(updates, T, lam)     (N, C) -> (N, N)   [Eq. 9]
     gqa_decode_attention(q, k, v, length)   one-token flash decode
 """
@@ -19,6 +21,8 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.fused_stats import fused_stats_pallas
+from repro.kernels.gram_update import (cached_selection_step_pallas,
+                                       gram_row_update_pallas)
 from repro.kernels.hetero_entropy import entropy_pallas
 from repro.kernels.pairwise import (hics_selection_step_pallas,
                                     pairwise_distance_pallas)
@@ -73,6 +77,68 @@ def hics_selection_step(updates: jnp.ndarray, temperature: float,
 def _selection_step_ref_jit(updates, temperature, lam, normalize):
     return ref.selection_step_ref(updates, temperature, lam,
                                   normalize=normalize)
+
+
+def hics_selection_step_cached(updates: jnp.ndarray, dist: jnp.ndarray,
+                               stats: jnp.ndarray, ids: jnp.ndarray,
+                               temperature: float, lam: float = 10.0,
+                               normalize: bool = False,
+                               gram_in_bf16: bool = False,
+                               use_pallas: bool | None = None):
+    """Incremental HiCS selection step (Alg. 1's K-row replacement):
+
+        (N, C) Δb, cached (dist (N, N), stats (N, 2) = [norm, Ĥ]),
+        (K,) refreshed ids  ->  (Ĥ (N,), dist, stats)
+
+    Only the rows/cols of ``ids`` are recomputed and re-symmetrized —
+    O(K·N·C) per round instead of the full step's O(N²·C).  The caller
+    owns the invariant that every row was refreshed since its Δb row
+    last changed (the functional hics selector refreshes the previous
+    round's participants at the top of every ``select``, which covers
+    the strict select→update alternation all drivers use).  Duplicate
+    ids are harmless; K = 0 returns the cache unchanged.  Pallas on
+    TPU, jitted oracle on CPU — each path reproduces its from-scratch
+    counterpart row-for-row.  ``gram_in_bf16`` only affects the kernel
+    path (the CPU oracle stays f32, like ``hics_selection_step``).
+    """
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return cached_selection_step_pallas(
+            updates, dist, stats, ids, temperature, lam=lam,
+            normalize=normalize, gram_in_bf16=gram_in_bf16,
+            interpret=not _on_tpu())
+    return _cached_step_ref_jit(updates, dist, stats, ids, temperature,
+                                lam, normalize)
+
+
+@functools.partial(jax.jit, static_argnums=(4, 5, 6))
+def _cached_step_ref_jit(updates, dist, stats, ids, temperature, lam,
+                         normalize):
+    return ref.cached_selection_step_ref(updates, dist, stats, ids,
+                                         temperature, lam,
+                                         normalize=normalize)
+
+
+def gram_row_update(updates: jnp.ndarray, stats: jnp.ndarray,
+                    ids: jnp.ndarray, lam: float = 10.0,
+                    gram_in_bf16: bool = False,
+                    use_pallas: bool | None = None) -> jnp.ndarray:
+    """(N, C), (N, 2) current [norm, Ĥ], (K,) ids -> (K, N) Eq. 9
+    distance strip — the raw K×N Gram/arccos product behind the cached
+    step, for callers that manage their own scatter.  Pallas (MXU
+    tiles, optional bf16 operands / f32 accumulation) on TPU; jitted
+    lax fallback on CPU."""
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return gram_row_update_pallas(updates, stats, ids, lam=lam,
+                                      gram_in_bf16=gram_in_bf16,
+                                      interpret=not _on_tpu())
+    return _gram_row_update_lax(updates, stats, ids, lam)
+
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def _gram_row_update_lax(updates, stats, ids, lam):
+    return ref.distance_strip_ref(updates, stats, ids, lam)
 
 
 def pairwise_distances(updates: jnp.ndarray, temperature: float,

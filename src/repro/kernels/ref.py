@@ -57,6 +57,67 @@ def selection_step_ref(updates: jnp.ndarray, temperature: float,
     return h, pairwise_distance_ref(x, h, lam)
 
 
+def cached_selection_step_ref(updates: jnp.ndarray, dist: jnp.ndarray,
+                              stats: jnp.ndarray, ids: jnp.ndarray,
+                              temperature: float, lam: float,
+                              normalize: bool = False,
+                              eps: float = 1e-8):
+    """Oracle for the INCREMENTAL HiCS selection step (Alg. 1 caching).
+
+    Alg. 1 replaces only the K participants' Δb rows per round, so the
+    other N−K rows of the Eq. 9 distance matrix are reusable.  Given the
+    cached ``dist`` (N, N) and per-row ``stats`` (N, 2) = [L2 norm, Ĥ]
+    from the previous round, this refreshes ONLY the rows/cols of
+    ``ids`` — O(K·N·C) instead of the full step's O(N²·C) — and returns
+    ``(Ĥ (N,), dist (N, N), stats (N, 2))`` with the refreshed cache.
+
+    Row-for-row this reproduces :func:`selection_step_ref` exactly: the
+    per-row entropy/norm reductions and the unit-row dot products are
+    the same expressions evaluated over the gathered rows, so as long as
+    every row of ``dist``/``stats`` has been refreshed since its Δb row
+    last changed, the cache equals the from-scratch matrix (bit-for-bit
+    at head widths where XLA's reduction tiling is row-independent; to
+    f32 tolerance otherwise).  Duplicate ids are harmless (the gathered
+    rows are identical) and ``ids`` of length 0 returns the cache as-is.
+    """
+    x = updates.astype(jnp.float32)
+    n = x.shape[0]
+    if ids.shape[0] == 0:
+        return stats[:, 1], dist, stats
+    rows = x[ids]                                         # (K, C)
+    if normalize:
+        rms = jnp.sqrt(jnp.mean(jnp.square(rows), axis=-1, keepdims=True))
+        h_rows = entropy_ref(rows / jnp.clip(rms, 1e-12, None),
+                             temperature)
+    else:
+        h_rows = entropy_ref(rows, temperature)
+    n_rows = jnp.linalg.norm(rows, axis=-1)
+    stats = stats.at[ids].set(jnp.stack([n_rows, h_rows], axis=-1))
+    strip = distance_strip_ref(x, stats, ids, lam, eps=eps)
+    # re-symmetrize: the row write and its transpose carry equal values
+    # (dot(a, b) == dot(b, a)), so the cache stays exactly symmetric
+    dist = dist.at[ids].set(strip)
+    dist = dist.at[:, ids].set(strip.T)
+    return stats[:, 1], dist, stats
+
+
+def distance_strip_ref(updates: jnp.ndarray, stats: jnp.ndarray,
+                       ids: jnp.ndarray, lam: float,
+                       eps: float = 1e-8) -> jnp.ndarray:
+    """(N, C), (N, 2) current [norm, Ĥ] stats, (K,) ids -> (K, N) Eq. 9
+    distance strip — the lax oracle for the ``gram_row_update`` kernel.
+    Unit rows are built exactly as :func:`pairwise_distance_ref` builds
+    them, with the cached norms standing in for the full norm sweep."""
+    x = updates.astype(jnp.float32)
+    unit = x / jnp.clip(stats[:, 0:1], eps, None)
+    cos = jnp.clip(unit[ids] @ unit.T, -1.0 + 1e-7, 1.0 - 1e-7)
+    ang = jnp.arccos(cos)
+    ang = jnp.where(ids[:, None] == jnp.arange(x.shape[0])[None, :],
+                    0.0, ang)
+    h_all = stats[:, 1]
+    return ang + lam * jnp.abs(stats[ids, 1][:, None] - h_all[None, :])
+
+
 def pairwise_distance_ref(updates: jnp.ndarray, entropies: jnp.ndarray,
                           lam: float, eps: float = 1e-8) -> jnp.ndarray:
     """Eq. 9 distance matrix.  updates (N, C), entropies (N,) -> (N, N)."""

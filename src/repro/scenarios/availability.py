@@ -84,6 +84,14 @@ def masked_select(fn: FunctionalSelector, state: SelectorState, t,
     an offline client picked by a coverage sweep never trained, so it
     must stay unseen (and its Δb row unwritten) until it is actually
     observed — ``update`` marks the clients that really participated.
+
+    Incremental-cache safety: the distance/stats cache an incremental
+    selector carries in its state is only ever written from Δb rows of
+    clients that really participated (``update`` stales exactly its
+    ``ids``; ``select``'s refresh is a pure function of Δb, not of the
+    masked weights), so masked-out clients can never poison cached rows
+    — zeroed weights steer the samplers only.  Locked down in
+    tests/test_incremental_selection.py.
     """
     w0 = state.weights
     masked = state._replace(weights=jnp.where(avail, w0, 0.0))

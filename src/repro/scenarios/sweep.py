@@ -6,7 +6,9 @@ partition_jax.Partition`, and a per-round PRNG-key chain.  This module
 stacks that pytree over seeds and drives the SAME jitted round step the
 server scans — ``jax.vmap`` turns "run S seeds" into one XLA program
 whose cohort updates batch across seeds on the MXU, instead of S
-sequential Python loops.
+sequential Python loops.  Selector-side caches (incremental HiCS's
+(S, N, N) stacked distance cache included) are ordinary state-pytree
+leaves, so they batch over the seed axis with everything else.
 
 Parity contract (asserted in tests/test_sweep.py): for a fixed seed the
 engine reproduces ``FederatedServer``'s host loop exactly — same

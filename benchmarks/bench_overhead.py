@@ -168,6 +168,66 @@ def incremental_vs_full(ns=(64, 256, 512), k: int = 10, c: int = 1024,
     return out
 
 
+def full_update_cached_vs_scratch(ns=(64, 256, 512), k: int = 10,
+                                  f: int = 1024, repeats: int = 5
+                                  ) -> dict:
+    """Cached K-row refresh vs from-scratch (N, N) matrix build for the
+    FULL-UPDATE selectors (CS's angular distance, DivFL's L2).
+
+    PR 4 gave HiCS the O(K·N·C) incremental path; this is the same
+    strip kernel with the Eq. 9 epilogue swapped for the selector's own
+    metric (``repro.kernels.cached_feature_step``), so CS and DivFL's
+    practical (participants-only) polling pay O(K·N·F) per round
+    instead of the O(N²·F) Table 3 charges the from-scratch build.
+    Timed per-round at steady state on the CPU oracle backend (compile
+    excluded); the TPU path swaps in the Pallas strip kernel.  Lands in
+    ``BENCH_selection.json`` (acceptance floor: cached beats scratch at
+    N=512)."""
+    import jax.numpy as jnp
+    from repro.kernels import cached_feature_step
+
+    rng = np.random.default_rng(0)
+    out: dict = {"k": k, "f": f}
+    for n in ns:
+        x = jnp.asarray(rng.normal(size=(n, f)) * 0.01, jnp.float32)
+        ids = jnp.asarray(rng.choice(n, size=k, replace=False),
+                          jnp.int32)
+        all_ids = jnp.arange(n, dtype=jnp.int32)
+        for metric in ("cosine", "l2"):
+            # warm, fully-refreshed cache (steady-state round input)
+            dist, stats = cached_feature_step(
+                x, jnp.zeros((n, n)), jnp.zeros((n, 2)), all_ids,
+                metric=metric, use_pallas=False)
+
+            def scratch():
+                return cached_feature_step(
+                    x, jnp.zeros((n, n)), jnp.zeros((n, 2)), all_ids,
+                    metric=metric, use_pallas=False)
+
+            def cached():
+                return cached_feature_step(x, dist, stats, ids,
+                                           metric=metric,
+                                           use_pallas=False)
+
+            scratch()[0].block_until_ready()    # compile both paths
+            cached()[0].block_until_ready()
+            t_s = t_c = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                scratch()[0].block_until_ready()
+                t_s = min(t_s, time.perf_counter() - t0)
+                t0 = time.perf_counter()
+                cached()[0].block_until_ready()
+                t_c = min(t_c, time.perf_counter() - t0)
+            out[f"N={n}/{metric}"] = {
+                "scratch_seconds": t_s, "cached_seconds": t_c,
+                "speedup": t_s / t_c}
+            print(f"  full-update N={n:4d} K={k} F={f} {metric:6s}: "
+                  f"scratch {t_s*1e3:8.2f} ms  cached {t_c*1e3:8.2f} ms"
+                  f"  ({t_s/t_c:.2f}x)", flush=True)
+    return out
+
+
 def clustering_scaling(ns=(64, 256, 512), repeats: int = 3) -> dict:
     """``agglomerate_device`` (naive O(N³), on-device) vs the numpy
     lazy-min-cache ``agglomerate`` (amortized O(N²)) — the clustering
@@ -209,6 +269,8 @@ def main(quick: bool = True):
     res["selection_step"] = sel
     ivf = incremental_vs_full()
     res["incremental_vs_full"] = ivf
+    fucs = full_update_cached_vs_scratch()
+    res["full_update_cached_vs_scratch"] = fucs
     clus = clustering_scaling()
     res["clustering_scaling"] = clus
     save_result("table3_overhead", res)
@@ -219,6 +281,7 @@ def main(quick: bool = True):
         "pre_gram_hbm_sweeps": {"fused": 1, "unfused": 3},
         "results": sel,
         "incremental_vs_full": ivf,
+        "full_update_cached_vs_scratch": fucs,
         "clustering_scaling": clus,
     }, indent=1))
     print(f"  wrote {REPO_ROOT / 'BENCH_selection.json'}", flush=True)

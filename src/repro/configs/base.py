@@ -101,7 +101,7 @@ class ModelConfig:
     # long-context handling for the long_500k shape:
     #   "native"  - O(1)-state decode (ssm/hybrid) or native SWA (mixtral)
     #   "swa"     - enable sliding-window (window below) only for long_500k
-    #   "skip"    - pair skipped (documented in DESIGN.md)
+    #   "skip"    - pair skipped (no semantic long-context analogue)
     long_context_mode: str = "swa"
     long_context_window: int = 4096
     # provenance

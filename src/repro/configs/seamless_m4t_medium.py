@@ -22,7 +22,7 @@ CONFIG = register(ModelConfig(
     encdec=EncDecConfig(encoder_layers=12, cross_attn=True,
                         max_source_frames=4096),
     # enc-dec speech translation: a 524k-token decode has no semantic
-    # analogue (see DESIGN.md §6) -> long_500k skipped.
+    # analogue -> long_500k skipped.
     long_context_mode="skip",
     source="arXiv:2308.11596",
 ))

@@ -36,9 +36,15 @@ bookkeeping behind the Table 3 overhead comparison:
     random   : nothing
     pow-d    : losses of ALL clients (ideal setting, App. A.1.2)
     cs       : full model updates of participants  (O(|θ|) clustering)
-    divfl    : full model updates of ALL clients   (ideal setting)
+    divfl    : full model updates of ALL clients   (ideal setting;
+               refresh="selected" polls participants only)
     fedcor   : losses of ALL clients in the warm-up stage (GP fit)
     hics     : bias updates of participants        (O(C) — the paper)
+
+All four requirement classes are computable inside the jitted round
+step, so EVERY selector rides the scanned server loop
+(``jit_rounds=True``) and the vmapped multi-seed sweep engine
+(``repro.scenarios``).
 
 HiCS-FL's O(C) hot path (entropy + norms + pairwise Eq. 9) is
 INCREMENTAL by default: the state carries a cached distance matrix and
@@ -47,7 +53,11 @@ INCREMENTAL by default: the state carries a cached distance matrix and
 ``incremental=False`` restores the from-scratch fused step
 ``hics_selection_step``, O(N²·C)), followed by on-device clustering
 (``agglomerate_device``, ``precomputed=True`` fast path) and Gumbel
-two-stage sampling (``hierarchical_sample_device``).
+two-stage sampling (``hierarchical_sample_device``).  The full-update
+selectors (cs/divfl) get the same treatment over their (N, F) feature
+buffers — ``repro.kernels.cached_feature_step`` with the selector's
+own cosine/L2 epilogue, plus a ``proj_dim`` feature-hashing knob that
+keeps |θ|-sized features bounded (see ``baselines.py``).
 """
 from repro.core.selectors.base import ClientSelector
 from repro.core.selectors.baselines import (ClusteredSamplingSelector,

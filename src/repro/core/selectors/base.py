@@ -48,6 +48,11 @@ class ClientSelector:
         self.fn: FunctionalSelector = self._make_functional(
             num_clients=self.n, num_select=self.k,
             total_rounds=self.total_rounds, weights=self.weights, **kw)
+        # the functional core owns the truth: factory kwargs can move a
+        # selector between requirement classes (e.g. divfl's
+        # refresh="selected" polls participants instead of everyone),
+        # so the instance shadows the class-level default
+        self.requires = self.fn.requires
         self._key = jax.random.PRNGKey(int(seed))
         self._key, k0 = jax.random.split(self._key)
         self.state: SelectorState = self.fn.init(k0)
@@ -102,7 +107,14 @@ class ClientSelector:
                 losses=jnp.asarray(losses, jnp.float32)
                 if losses is not None and "loss_all" in req else None)
         ids = jnp.asarray(list(selected), jnp.int32)
-        if obs.bias_updates is not None and self.state.stale_ids.shape[0]:
+        # an update stales cached rows when the selector carries a
+        # staleness buffer and this observation writes the buffer it
+        # caches over (Δb for hics, full-update features for cs/divfl)
+        stales = self.state.stale_ids.shape[0] and (
+            (obs.bias_updates is not None and "bias_sel" in req)
+            or (obs.full_updates is not None
+                and bool(req & {"full_all", "full_sel"})))
+        if stales:
             if self._refresh_pending:
                 raise RuntimeError(
                     f"{self.name}: update() called twice without an "
@@ -129,11 +141,14 @@ class ClientSelector:
                 and state.delta_b.shape[1] != obs.bias_updates.shape[-1]):
             state = state._replace(delta_b=jnp.zeros(
                 (self.n, obs.bias_updates.shape[-1]), jnp.float32))
-        if (obs.full_updates is not None
-                and req & {"full_all", "full_sel"}
-                and state.feats.shape[1] != obs.full_updates.shape[-1]):
-            state = state._replace(feats=jnp.zeros(
-                (self.n, obs.full_updates.shape[-1]), jnp.float32))
+        if obs.full_updates is not None and req & {"full_all", "full_sel"}:
+            # the stored width can differ from the observed width when
+            # the selector down-projects (fn.feat_width maps P -> F)
+            fw = self.fn.feat_width or (lambda p: p)
+            want = fw(obs.full_updates.shape[-1])
+            if state.feats.shape[1] != want:
+                state = state._replace(feats=jnp.zeros(
+                    (self.n, want), jnp.float32))
         return state
 
     def estimated_entropies(self) -> Optional[np.ndarray]:

@@ -8,15 +8,30 @@
 
 All five are expressed in pure jax over the shared ``SelectorState``
 pytree, so the OO shims and the functional path draw from the same
-transition functions.  CS and DivFL operate on |θ|-sized features
-(``full_sel`` / ``full_all``) — the O(N²|θ|) cost Table 3 charges them
-with — so the server's scanned round loop excludes them
-(``jit_capable=False`` there refers to the scan-carry footprint, not
-to traceability: the transitions themselves jit fine).
+transition functions — and ALL of them are ``jit_capable``: the server
+scans whole rounds through ``lax.scan`` and the sweep engine vmaps
+whole experiments for every selector.
+
+CS and DivFL operate on flattened full-update features (``full_sel`` /
+``full_all``) — the O(N²|θ|) similarity cost Table 3 charges them
+with.  Two mechanisms keep that family honest AND device-resident:
+
+* ``proj_dim`` bounds the (N, F) feature buffer the state carries: raw
+  |θ|-wide updates are sign-hashed into F buckets (feature hashing —
+  inner products are preserved in expectation, so cosine/L2 geometry
+  survives), which is what makes the scan-carry footprint acceptable
+  at production |θ|.  ``proj_dim=None`` stores updates verbatim.
+* ``incremental=True`` gives both selectors the K-row distance caching
+  HiCS got in PR 4: the state carries a cached (N, N) matrix + (N, 2)
+  [norm, 0] row stats, and ``select`` refreshes only the rows the last
+  ``update`` wrote (``repro.kernels.cached_feature_step`` — the strip
+  kernel with the selector's own cosine/L2 epilogue), O(K·N·F) per
+  round instead of O(N²·F).  ``incremental=False`` rebuilds the matrix
+  from the feature buffer each round — kept as the parity oracle.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,9 +40,47 @@ from repro.core.clustering import agglomerate_device
 from repro.core.sampling import coverage_sweep_device, weighted_sample_device
 from repro.core.selectors.base import ClientSelector
 from repro.core.selectors.functional import (FunctionalSelector,
-                                             init_state, mark_seen, take_key)
+                                             init_state, mark_seen,
+                                             stale_rows, take_key)
+from repro.kernels import cached_feature_step
 
 _LOG_FLOOR = 1e-30
+
+
+def _make_projector(proj_dim: Optional[int], proj_seed: int
+                    ) -> tuple[Callable, Callable[[int], int]]:
+    """(project, feat_width) for the full-update selectors.
+
+    ``project`` maps (..., P) raw flattened updates to the (..., F)
+    stored features, F = min(P, proj_dim): a signed feature hash —
+    Rademacher signs drawn from ``proj_seed`` (a compile-time constant,
+    identical across host/scan/sweep drivers), then contiguous buckets
+    summed — so ⟨h(u), h(v)⟩ is an unbiased estimate of ⟨u, v⟩ and the
+    cosine/L2 distances the selectors cluster on survive the
+    compression.  ``proj_dim=None`` is the identity.  ``feat_width``
+    exposes the P -> F map so buffer sizing (server init, OO shim lazy
+    growth) agrees with ``project`` without calling it.
+    """
+    if proj_dim is None:
+        return (lambda u: u), (lambda p: p)
+    f_cap = int(proj_dim)
+
+    def feat_width(p: int) -> int:
+        return min(int(p), f_cap)
+
+    def project(u: jnp.ndarray) -> jnp.ndarray:
+        p = u.shape[-1]
+        f = feat_width(p)
+        if f == p:
+            return u
+        signs = jax.random.rademacher(
+            jax.random.PRNGKey(proj_seed), (p,), jnp.float32)
+        chunk = -(-p // f)
+        u = u * signs
+        u = jnp.pad(u, [(0, 0)] * (u.ndim - 1) + [(0, f * chunk - p)])
+        return u.reshape(u.shape[:-1] + (f, chunk)).sum(axis=-1)
+
+    return project, feat_width
 
 
 # ---------------------------------------------------------------------------
@@ -100,28 +153,51 @@ def powd_functional(num_clients: int, num_select: int, total_rounds: int,
 
 def cs_functional(num_clients: int, num_select: int, total_rounds: int,
                   weights=None, feat_dim: int = 1,
+                  proj_dim: Optional[int] = None, proj_seed: int = 0,
+                  incremental: bool = True,
                   **_kw) -> FunctionalSelector:
+    """Clustered Sampling [11]: ward clustering of the participants'
+    full updates under the angular (arccos cosine) distance, one pick
+    per cluster ∝ p_k.  ``feat_dim`` is the RAW flattened-update width
+    the server observes; ``proj_dim``/``proj_seed`` bound the stored
+    features and ``incremental`` enables the K-row distance cache (see
+    the module docstring)."""
     n = int(num_clients)
     k = min(int(num_select), n)
-    feat_dim = max(1, int(feat_dim))
+    project, feat_width = _make_projector(proj_dim, int(proj_seed))
+    f_dim = max(1, feat_width(int(feat_dim)))
+    incremental = bool(incremental)
 
     def init(key):
-        return init_state(key, n, weights, feat_dim=feat_dim)
+        return init_state(key, n, weights, feat_dim=f_dim,
+                          dist_cache=incremental,
+                          stale_len=k if incremental else 0)
 
     def select(state, t, key=None):
         state, key = take_key(state, key)
+
+        if incremental:
+            # K-row refresh of the cached angular distance (idempotent
+            # on fresh rows) — the only feature-dependent compute
+            dist_c, stats_c = cached_feature_step(
+                state.feats, state.dist_cache, state.row_stats,
+                state.stale_ids, metric="cosine")
+            state = state._replace(dist_cache=dist_c, row_stats=stats_c)
 
         def warmup(key):
             # deterministic coverage like Alg. 1's first rounds
             return coverage_sweep_device(key, state.seen, k)
 
         def clustered(key):
-            f = state.feats
-            norms = jnp.linalg.norm(f, axis=-1, keepdims=True)
-            unit = f / jnp.clip(norms, 1e-8, None)
-            cos = jnp.clip(unit @ unit.T, -1.0 + 1e-7, 1.0 - 1e-7)
-            ang = jnp.arccos(cos)
-            ang = jnp.where(jnp.eye(n, dtype=bool), 0.0, ang)
+            if incremental:
+                ang = state.dist_cache
+            else:
+                f = state.feats
+                norms = jnp.linalg.norm(f, axis=-1, keepdims=True)
+                unit = f / jnp.clip(norms, 1e-8, None)
+                cos = jnp.clip(unit @ unit.T, -1.0 + 1e-7, 1.0 - 1e-7)
+                ang = jnp.arccos(cos)
+                ang = jnp.where(jnp.eye(n, dtype=bool), 0.0, ang)
             # exactly symmetric by construction — skip re-symmetrizing
             labels = agglomerate_device(ang, k, linkage="ward",
                                         precomputed=True)
@@ -139,12 +215,16 @@ def cs_functional(num_clients: int, num_select: int, total_rounds: int,
         if obs.full_updates is None:
             return state
         feats = state.feats.at[ids].set(
-            jnp.asarray(obs.full_updates, jnp.float32))
-        return mark_seen(state._replace(
+            project(jnp.asarray(obs.full_updates, jnp.float32)))
+        state = mark_seen(state._replace(
             feats=feats, hist_count=state.hist_count + 1), ids)
+        if incremental:
+            state = stale_rows(state, ids, k)
+        return state
 
     return FunctionalSelector("cs", frozenset({"full_sel"}), init, select,
-                              update, jit_capable=False)
+                              update, jit_capable=True,
+                              feat_width=feat_width)
 
 
 # ---------------------------------------------------------------------------
@@ -154,25 +234,71 @@ def cs_functional(num_clients: int, num_select: int, total_rounds: int,
 
 def divfl_functional(num_clients: int, num_select: int, total_rounds: int,
                      weights=None, feat_dim: int = 1,
+                     proj_dim: Optional[int] = None, proj_seed: int = 0,
+                     refresh: str = "all", incremental: bool = True,
                      **_kw) -> FunctionalSelector:
+    """DivFL [2]: greedy facility location on pairwise L2 distances of
+    flattened updates.
+
+    ``refresh`` picks the polling regime:
+
+      "all"      — ideal setting (the Table 3 cost): a one-step
+                   gradient from EVERY client each round replaces the
+                   whole feature buffer (``requires = full_all``).
+                   Every row changes per round, so the K-row cache
+                   cannot help — ``incremental`` is ignored and the
+                   distance matrix is built from the buffer each round.
+      "selected" — practical setting: only the participants' updates
+                   refresh their feature rows (``requires =
+                   full_sel``), everyone else keeps a stale
+                   representation — exactly the K-rows-per-round
+                   pattern the distance cache accelerates, O(K·N·F).
+                   A coverage sweep polls every client once before the
+                   first facility-location round so no distance is ever
+                   computed against a never-observed row.
+
+    ``feat_dim`` is the RAW flattened-update width; ``proj_dim``/
+    ``proj_seed`` bound the stored features (module docstring).
+    """
     n = int(num_clients)
     k = min(int(num_select), n)
-    feat_dim = max(1, int(feat_dim))
+    if refresh not in ("all", "selected"):
+        raise ValueError(f"refresh must be 'all' or 'selected', "
+                         f"got {refresh!r}")
+    selected_only = refresh == "selected"
+    project, feat_width = _make_projector(proj_dim, int(proj_seed))
+    f_dim = max(1, feat_width(int(feat_dim)))
+    incremental = bool(incremental) and selected_only
 
     def init(key):
-        return init_state(key, n, weights, feat_dim=feat_dim)
+        return init_state(key, n, weights, feat_dim=f_dim,
+                          dist_cache=incremental,
+                          stale_len=k if incremental else 0)
 
     def select(state, t, key=None):
         state, key = take_key(state, key)
 
+        if incremental:
+            dist_c, stats_c = cached_feature_step(
+                state.feats, state.dist_cache, state.row_stats,
+                state.stale_ids, metric="l2")
+            state = state._replace(dist_cache=dist_c, row_stats=stats_c)
+
         def cold(key):
+            if selected_only:
+                # poll everyone once before trusting the distances
+                return coverage_sweep_device(key, state.seen, k)
             return weighted_sample_device(key, state.weights, k)
 
         def warm(key):
-            g = state.feats
-            sq = jnp.sum(g * g, axis=1)
-            dist = jnp.sqrt(jnp.clip(
-                sq[:, None] + sq[None, :] - 2.0 * (g @ g.T), 0.0, None))
+            if incremental:
+                dist = state.dist_cache
+            else:
+                g = state.feats
+                sq = jnp.sum(g * g, axis=1)
+                dist = jnp.sqrt(jnp.clip(
+                    sq[:, None] + sq[None, :] - 2.0 * (g @ g.T), 0.0,
+                    None))
 
             # greedy facility location: minimize Σ_i min_{j∈S} dist(i,j)
             def body(i, carry):
@@ -189,19 +315,35 @@ def divfl_functional(num_clients: int, num_select: int, total_rounds: int,
                              jnp.zeros(n, bool), jnp.full(n, jnp.inf)))
             return chosen
 
-        ids = jax.lax.cond(state.hist_count > 0, warm, cold, key)
+        warm_ok = (state.unseen_count == 0 if selected_only
+                   else state.hist_count > 0)
+        ids = jax.lax.cond(warm_ok, warm, cold, key)
         return ids, state
 
     def update(state, t, ids, obs):
-        # ideal setting: only a full (N, P) poll refreshes the features
-        if obs.full_updates is None or obs.full_updates.shape[0] != n:
+        if obs.full_updates is None:
+            return state
+        if selected_only:
+            # practical setting: participants' rows only (gather before
+            # project — hashing all N |θ|-wide rows to keep K is waste)
+            raw = jnp.asarray(obs.full_updates, jnp.float32)
+            rows = project(raw[ids] if raw.shape[0] == n else raw)
+            state = mark_seen(state._replace(
+                feats=state.feats.at[ids].set(rows),
+                hist_count=state.hist_count + 1), ids)
+            if incremental:
+                state = stale_rows(state, ids, k)
+            return state
+        # ideal setting: only a full (N, P) poll refreshes the buffer
+        if obs.full_updates.shape[0] != n:
             return state
         return state._replace(
-            feats=jnp.asarray(obs.full_updates, jnp.float32),
+            feats=project(jnp.asarray(obs.full_updates, jnp.float32)),
             hist_count=state.hist_count + 1)
 
-    return FunctionalSelector("divfl", frozenset({"full_all"}), init,
-                              select, update, jit_capable=False)
+    requires = frozenset({"full_sel" if selected_only else "full_all"})
+    return FunctionalSelector("divfl", requires, init, select, update,
+                              jit_capable=True, feat_width=feat_width)
 
 
 # ---------------------------------------------------------------------------
@@ -302,7 +444,9 @@ class PowerOfChoiceSelector(ClientSelector):
 
 class ClusteredSamplingSelector(ClientSelector):
     """Clustered Sampling [11] (Alg. 2 flavour) on *full* updates —
-    the O(N²|θ|) similarity cost Table 3 charges it with."""
+    the O(N²|θ|) similarity cost Table 3 charges it with.  The K-row
+    distance cache (``incremental=True``, default) amortizes that to
+    O(K·N·F) per round; ``proj_dim`` bounds F."""
     name = "cs"
     requires = frozenset({"full_sel"})
 
@@ -312,7 +456,9 @@ class ClusteredSamplingSelector(ClientSelector):
 
 class DivFLSelector(ClientSelector):
     """DivFL [2]: greedy facility-location submodular maximization;
-    ideal setting = 1-step gradients from all clients each round."""
+    ideal setting (``refresh="all"``) = 1-step gradients from all
+    clients each round; ``refresh="selected"`` polls participants only
+    and rides the K-row distance cache."""
     name = "divfl"
     requires = frozenset({"full_all"})
 

@@ -88,6 +88,11 @@ class FunctionalSelector(NamedTuple):
     jit_capable: bool = True
     #: optional (state) -> (N,) Ĥ, for history recording inside the scan
     entropies: Optional[Callable[[SelectorState], jnp.ndarray]] = None
+    #: optional observed-full-update-width -> stored-feature-width map.
+    #: Selectors that down-project |θ|-sized updates (cs/divfl with
+    #: ``proj_dim``) store features narrower than the observations; the
+    #: OO shim's lazy buffer growth sizes ``state.feats`` through this.
+    feat_width: Optional[Callable[[int], int]] = None
 
 
 def init_state(key: jax.Array, num_clients: int, weights=None,
@@ -138,3 +143,30 @@ def mark_seen(state: SelectorState, ids: jnp.ndarray) -> SelectorState:
     seen = state.seen.at[ids].set(True)
     return state._replace(
         seen=seen, unseen_count=jnp.sum(~seen).astype(jnp.int32))
+
+
+def stale_rows(state: SelectorState, ids, k: int) -> SelectorState:
+    """Record ``ids`` as the cached-distance rows the next ``select``
+    must refresh.  Shared by every incremental selector (hics on Δb,
+    cs/divfl on full-update features).
+
+    The buffer is fixed at (K,): shorter id lists pad by repeating the
+    last id (an idempotent extra refresh); an empty list keeps the
+    pending staleness (nothing new to refresh, nothing refreshed yet).
+    More than K ids cannot be represented — the caller must refresh
+    between updates (the OO shim fails fast on that hazard).
+    """
+    ids_arr = jnp.asarray(ids, jnp.int32).reshape(-1)
+    kk = ids_arr.shape[0]
+    if kk > k:
+        raise ValueError(
+            f"incremental selector can refresh at most K={k} cached "
+            f"rows per round, got {kk} updated ids")
+    if kk == k:
+        stale = ids_arr
+    elif kk == 0:
+        stale = state.stale_ids
+    else:
+        stale = jnp.concatenate(
+            [ids_arr, jnp.broadcast_to(ids_arr[-1:], (k - kk,))])
+    return state._replace(stale_ids=stale)

@@ -41,7 +41,8 @@ from repro.core.sampling import (anneal_device, coverage_sweep_device,
 from repro.core.selectors.base import ClientSelector
 from repro.core.selectors.functional import (FunctionalSelector,
                                              Observations, SelectorState,
-                                             init_state, mark_seen, take_key)
+                                             init_state, mark_seen,
+                                             stale_rows, take_key)
 from repro.kernels import hics_selection_step, hics_selection_step_cached
 
 REQUIRES = frozenset({"bias_sel"})
@@ -117,23 +118,8 @@ def hics_functional(num_clients: int, num_select: int, total_rounds: int,
         state = mark_seen(state._replace(
             delta_b=db, hist_count=state.hist_count + 1), ids)
         if incremental:
-            # stale the replaced rows; the next select refreshes them.
-            # The buffer is fixed at (K,): shorter id lists pad by
-            # repeating the last id (an idempotent extra refresh).
-            ids_arr = jnp.asarray(ids, jnp.int32).reshape(-1)
-            kk = ids_arr.shape[0]
-            if kk > k:
-                raise ValueError(
-                    f"incremental hics can refresh at most K={k} rows "
-                    f"per round, got {kk} updated ids")
-            if kk == k:
-                stale = ids_arr
-            elif kk == 0:      # no new rows — keep pending staleness
-                stale = state.stale_ids
-            else:
-                stale = jnp.concatenate(
-                    [ids_arr, jnp.broadcast_to(ids_arr[-1:], (k - kk,))])
-            state = state._replace(stale_ids=stale)
+            # stale the replaced rows; the next select refreshes them
+            state = stale_rows(state, ids, k)
         return state
 
     def entropies(state: SelectorState) -> jnp.ndarray:

@@ -1,5 +1,5 @@
-"""Synthetic datasets (the offline substitute for FMNIST / CIFAR10 /
-Mini-ImageNet / THUC news — see DESIGN.md §7).
+"""Synthetic datasets (the offline substitute for the paper's FMNIST /
+CIFAR10 / Mini-ImageNet / THUC news benchmarks).
 
 Classification: a Gaussian-mixture manifold per class.  Class c has a
 random unit prototype μ_c ∈ R^d plus a low-rank within-class subspace;

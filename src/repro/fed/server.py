@@ -3,12 +3,14 @@ selection, for any (init, apply[, features]) model triple.
 
 Per round t:
   1. S^t ← select (functional core: ids, state = fn.select(state, t, key))
-  2. whatever the selector requires is computed server-side:
+  2. LocalUpdate for the selected clients (one vmapped jit'd cohort step)
+  3. θ^{t+1} ← (1/K) Σ_{k∈S^t} θ_k^t   (unbiased-sampling aggregation)
+  4. whatever the selector ``requires`` is computed server-side:
        loss_all  — global-model loss on every client's data (pow-d, FedCor
                    ideal setting); one vmapped forward
        full_all  — 1-step gradient from every client (DivFL ideal setting)
-  3. LocalUpdate for the selected clients (one vmapped jit'd cohort step)
-  4. θ^{t+1} ← (1/K) Σ_{k∈S^t} θ_k^t   (unbiased-sampling aggregation)
+       full_sel  — participants' flattened θ_k − θ^{t+1} (CS, DivFL's
+                   practical refresh="selected" setting)
   5. Δb^{(k)} stacked from the head; state = fn.update(state, t, ids, obs)
 
 Two drivers over the same functional selector core:
@@ -17,10 +19,16 @@ Two drivers over the same functional selector core:
     selector shim executes the jitted select/update transitions.
   * ``run(jit_rounds=True)`` — the whole round is ONE jitted
     ``round_step`` (select → vmapped local update → aggregate → stacked
-    Δb → selector update) driven through ``lax.scan`` in
-    ``eval_every``-sized segments: zero device→host→device transfers
-    between ``select`` and ``update``.  Both paths consume the same
-    PRNG-key chain, so they produce identical participant sets.
+    Δb / full-update observations → selector update) driven through
+    ``lax.scan`` in ``eval_every``-sized segments: zero
+    device→host→device transfers between ``select`` and ``update``.
+    Every requirement class is computable inside the step — including
+    DivFL's all-clients gradient poll, whose per-round key rides the
+    scan inputs — so all six selectors scan.  Both paths consume the
+    same PRNG-key chain, so they produce identical participant sets
+    (for DivFL's ideal mode, up to fp tie-breaking in the greedy
+    facility-location argmax once gradients converge — see
+    tests/test_full_update_selectors.py).
 
 The selector state is an opaque pytree in both drivers, so selector-
 side caches — e.g. incremental HiCS's (N, N) distance cache with K-row
@@ -48,8 +56,12 @@ from repro.core.hetero import head_num_classes
 from repro.fed.client import (LocalSpec, init_extra, make_eval_fn,
                               make_local_update)
 
-#: requirements the scanned round loop can satisfy on-device
-_SCANNABLE = frozenset({"bias_sel", "loss_all"})
+#: requirements the scanned round loop can satisfy on-device.  All four
+#: are computable inside the jitted round step: loss_all is a vmapped
+#: forward, full_sel flattens the cohort's params delta, full_all runs
+#: the one-step all-clients gradient poll (DivFL's ideal setting) —
+#: so every registered selector can ride ``jit_rounds=True``.
+_SCANNABLE = frozenset({"bias_sel", "loss_all", "full_sel", "full_all"})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +91,32 @@ def _tree_stack_scatter(stacked, ids, values):
 def _flatten_params(tree) -> jnp.ndarray:
     return jnp.concatenate([jnp.ravel(x) for x in
                             jax.tree_util.tree_leaves(tree)])
+
+
+def full_sel_updates(params, new_params) -> jnp.ndarray:
+    """The ``full_sel`` observation: participants' flattened
+    θ_k − θ^{t+1} against the aggregated global params, (K, P).  ONE
+    definition shared by the host loop, the scanned round step and the
+    sweep engine — three-way participant-set parity depends on these
+    drivers computing bit-identical observations."""
+    flat_global = _flatten_params(params)
+    return jax.vmap(lambda p: _flatten_params(p) - flat_global)(
+        new_params)
+
+
+def make_grad_all(apply_fn, local: LocalSpec):
+    """The ``full_all`` observation (DivFL's ideal setting): a vmapped
+    one-step fedavg gradient poll over all clients,
+    ``(params, x, y, mask, rngs) -> (N, P)`` flattened θ_k − θ.
+    Shared by the server and the sweep engine (see
+    :func:`full_sel_updates` on why)."""
+    one_step = dataclasses.replace(local, epochs=1, algo="fedavg")
+    lu1 = make_local_update(apply_fn, one_step)
+    return jax.vmap(
+        lambda p, x, y, m, r: _flatten_params(
+            jax.tree_util.tree_map(
+                lambda a, b: a - b, lu1(p, {}, x, y, m, r)[0], p)),
+        in_axes=(None, 0, 0, 0, 0))
 
 
 class FederatedServer:
@@ -132,14 +170,7 @@ class FederatedServer:
             ex0) if ex0 else {}
         # DivFL ideal setting: one-step gradients from all clients
         if "full_all" in self.selector.requires:
-            one_step = dataclasses.replace(cfg.local, epochs=1,
-                                           algo="fedavg")
-            lu1 = make_local_update(apply_fn, one_step)
-            self._grad_all = jax.jit(jax.vmap(
-                lambda p, x, y, m, r: _flatten_params(
-                    jax.tree_util.tree_map(
-                        lambda a, b: a - b, lu1(p, {}, x, y, m, r)[0], p)),
-                in_axes=(None, 0, 0, 0, 0)))
+            self._grad_all = jax.jit(make_grad_all(apply_fn, cfg.local))
         self._round_step: Optional[Callable] = None
         self._scan_jit: Optional[Callable] = None
         self.history: Dict[str, list] = {
@@ -209,9 +240,7 @@ class FederatedServer:
                     self.params, self.x, self.y, self.mask,
                     jax.random.split(kg, cfg.num_clients))
             elif "full_sel" in self.selector.requires:
-                flat_global = _flatten_params(self.params)
-                full_updates = jax.vmap(
-                    lambda p: _flatten_params(p) - flat_global)(new_params)
+                full_updates = full_sel_updates(self.params, new_params)
             self.selector.update(t, list(ids), Observations(
                 bias_updates=bias_updates, full_updates=full_updates,
                 losses=losses))
@@ -233,16 +262,25 @@ class FederatedServer:
     # ------------------------------------------------------------------
     def _make_round_step(self) -> Callable:
         """One fully-jitted federated round over the functional selector
-        core: (params, extras, selector state) carry, (t, key) input."""
+        core: (params, extras, selector state) carry, (t, key[, grad
+        key]) input.  Mirrors the host loop op-for-op — including the
+        post-aggregation full-update observations the CS/DivFL
+        selectors consume — so both drivers produce identical
+        participant sets from the same key chain."""
         cfg = self.cfg
         fn = self.selector.fn
         has_extras = bool(self._extras)
         need_losses = "loss_all" in fn.requires
+        need_full_sel = "full_sel" in fn.requires
+        need_full_all = "full_all" in fn.requires
         lu_v = jax.vmap(self._lu, in_axes=(None, 0, 0, 0, 0, 0, None))
 
         def round_step(carry, xs):
             params, extras, sstate = carry
-            t, kr = xs
+            if need_full_all:
+                t, kr, kg = xs
+            else:
+                t, kr = xs
             k_sel, k_loc = jax.random.split(kr)
             ids, sstate = fn.select(sstate, t, k_sel)
             rngs = jax.random.split(k_loc, cfg.num_select)
@@ -257,12 +295,19 @@ class FederatedServer:
             bias_updates = head_bias_updates_stacked(params, new_params)
             params = jax.tree_util.tree_map(
                 lambda stacked: jnp.mean(stacked, axis=0), new_params)
-            losses = None
+            losses = full_updates = None
             if need_losses:
                 losses, _ = self._eval_vmapped(params, self.x, self.y,
                                                self.mask)
+            if need_full_all:
+                full_updates = self._grad_all(
+                    params, self.x, self.y, self.mask,
+                    jax.random.split(kg, cfg.num_clients))
+            elif need_full_sel:
+                full_updates = full_sel_updates(params, new_params)
             sstate = fn.update(sstate, t, ids, Observations(
-                bias_updates=bias_updates, losses=losses))
+                bias_updates=bias_updates, full_updates=full_updates,
+                losses=losses))
             ent = (fn.entropies(sstate) if fn.entropies is not None
                    else jnp.zeros((0,), jnp.float32))
             out = (ids, jnp.mean(metrics["train_loss"]), ent)
@@ -289,14 +334,20 @@ class FederatedServer:
         # 0, ee, 2ee, ... — same cadence, one round offset).  Equal
         # segment lengths keep the scanned round_step at one compile.
         seg_len = cfg.eval_every if self.test is not None else cfg.rounds
+        need_gk = "full_all" in fn.requires
         t = 0
         while t < cfg.rounds:
             n = min(seg_len, cfg.rounds - t)
-            keys = []
-            for _ in range(n):       # same key chain as the host loop
+            keys, gkeys = [], []
+            for _ in range(n):       # same key chain as the host loop:
                 self.rng, kr = jax.random.split(self.rng)
                 keys.append(kr)
-            xs = (jnp.arange(t, t + n, dtype=jnp.int32), jnp.stack(keys))
+                if need_gk:          # ... kr then the grad-poll key
+                    self.rng, kg = jax.random.split(self.rng)
+                    gkeys.append(kg)
+            ts = jnp.arange(t, t + n, dtype=jnp.int32)
+            xs = ((ts, jnp.stack(keys), jnp.stack(gkeys)) if need_gk
+                  else (ts, jnp.stack(keys)))
             t_start = time.perf_counter()
             carry, (ids_seg, loss_seg, ent_seg) = self._scan_jit(carry, xs)
             jax.block_until_ready(carry)

@@ -2,9 +2,11 @@
 
   fused_stats      — single-sweep entropy + L2 norm + RMS over (N, C)
                      (the pre-Gram stage of the HiCS selection step)
-  gram_update      — K-row incremental refresh of the cached Eq. 9
-                     distance (Alg. 1 replaces K Δb rows per round, so
-                     the strip is O(K·N·C) vs the full step's O(N²·C))
+  gram_update      — K-row incremental refresh of a cached distance
+                     matrix (Alg. 1 replaces K rows per round, so the
+                     strip is O(K·N·C) vs the full step's O(N²·C)),
+                     with a pluggable epilogue: arccos+λ|ΔĤ| (Eq. 9,
+                     HiCS), cosine (Clustered Sampling) or L2 (DivFL)
   hetero_entropy   — fused temperature-softmax entropy over class blocks
                      (entropy-only API; fused_stats supersedes it on the
                      selection path)
@@ -22,13 +24,13 @@ the device half of the functional selector protocol
 ``jit_rounds=True`` — no host round trip between the cohort step and
 the next selection.
 """
-from repro.kernels.ops import (estimate_entropies, fused_row_stats,
-                               gqa_decode_attention, gram_row_update,
-                               hics_selection_step,
+from repro.kernels.ops import (cached_feature_step, estimate_entropies,
+                               fused_row_stats, gqa_decode_attention,
+                               gram_row_update, hics_selection_step,
                                hics_selection_step_cached,
                                pairwise_distances)
 
-__all__ = ["estimate_entropies", "fused_row_stats",
-           "gqa_decode_attention", "gram_row_update",
+__all__ = ["cached_feature_step", "estimate_entropies",
+           "fused_row_stats", "gqa_decode_attention", "gram_row_update",
            "hics_selection_step", "hics_selection_step_cached",
            "pairwise_distances"]

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: K-row incremental update of the Eq. 9 distance.
+"""Pallas TPU kernel: K-row incremental update of a cached distance.
 
 HiCS-FL's Algorithm 1 replaces only the K participating clients' Δb
 rows each round, so N−K rows of the Gram/arccos distance matrix carry
@@ -11,6 +11,15 @@ and MXU work per round — it recomputes just the K×N strip
 for the refreshed rows u ∈ ids, O(K·N·C), and scatters it back into
 the cached matrix (rows AND columns — dot products are symmetric, so
 the scatter keeps the cache exactly symmetric).
+
+The Gram product is metric-agnostic, so the Eq. 9 arccos+λ|ΔĤ| tail is
+one of three pluggable EPILOGUES applied on the last C block: "arccos"
+(HiCS), "cosine" (Clustered Sampling's angular distance over full
+updates) and "l2" (DivFL's Euclidean distance, rebuilt from the cached
+norms via |a−b|² = |a|² + |b|² − 2⟨a, b⟩).  That one switch lets the
+full-update baselines ride the SAME cached K-row path HiCS uses —
+``cached_feature_step_pallas`` below — which is what puts DivFL/CS on
+the scanned round loop at O(K·N·F) per round.
 
 The strip kernel reuses the Gram tiling of ``kernels/pairwise``: (BK,
 BC) × (BN, BC) partial products accumulated in a VMEM f32 scratch over
@@ -36,12 +45,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import ref
 from repro.kernels.fused_stats import _fused_stats_padded
 from repro.kernels.pairwise import _gram_blocks
 
 
+#: strip-kernel epilogues: how the K×N Gram product becomes a distance.
+#: "arccos" is Eq. 9 (HiCS); "cosine" is the angular distance alone
+#: (Clustered Sampling); "l2" is Euclidean distance from the cached
+#: norms (DivFL).  Static per trace — each picks a different tail of
+#: VPU arithmetic on the final C block.
+EPILOGUES = ("arccos", "cosine", "l2")
+
+
 def _gram_row_kernel(rows_ref, x_ref, stats_r_ref, stats_c_ref, ids_ref,
-                     o_ref, acc_ref, *, lam, eps, block_n):
+                     o_ref, acc_ref, *, lam, eps, block_n, epilogue):
     ci = pl.program_id(2)
     nc = pl.num_programs(2)
     j = pl.program_id(1)
@@ -61,38 +79,51 @@ def _gram_row_kernel(rows_ref, x_ref, stats_r_ref, stats_c_ref, ids_ref,
         # stats lanes: [:, 0] = L2 norm, [:, 1] = entropy
         nr = stats_r_ref[..., 0:1].astype(jnp.float32)    # (BK, 1)
         ncol = stats_c_ref[..., 0:1].astype(jnp.float32)  # (BN, 1)
-        denom = jnp.maximum(nr, eps) * jnp.maximum(ncol, eps).T
-        cos = acc_ref[...] / denom
-        cos = jnp.clip(cos, -1.0 + 1e-7, 1.0 - 1e-7)
-        ang = jnp.arccos(cos)
+        if epilogue == "l2":
+            # √(|a|² + |b|² − 2⟨a, b⟩) from the cached norms; the clip
+            # absorbs the fp cancellation of near-identical rows
+            d = jnp.sqrt(jnp.clip(
+                nr * nr + (ncol * ncol).T - 2.0 * acc_ref[...], 0.0,
+                None))
+        else:                                 # cosine family
+            denom = jnp.maximum(nr, eps) * jnp.maximum(ncol, eps).T
+            cos = acc_ref[...] / denom
+            cos = jnp.clip(cos, -1.0 + 1e-7, 1.0 - 1e-7)
+            d = jnp.arccos(cos)
         # zero the TRUE diagonal: the strip row's global client index
         # (ids operand) against the tile's global column range
         row_id = ids_ref[..., 0:1]                        # (BK, 1) int32
-        col = j * block_n + jax.lax.broadcasted_iota(jnp.int32, ang.shape,
+        col = j * block_n + jax.lax.broadcasted_iota(jnp.int32, d.shape,
                                                      1)
-        ang = jnp.where(row_id == col, 0.0, ang)
-        hr = stats_r_ref[..., 1:2].astype(jnp.float32)    # (BK, 1)
-        hc = stats_c_ref[..., 1:2].astype(jnp.float32)    # (BN, 1)
-        o_ref[...] = ang + lam * jnp.abs(hr - hc.T)
+        d = jnp.where(row_id == col, 0.0, d)
+        if epilogue == "arccos":
+            hr = stats_r_ref[..., 1:2].astype(jnp.float32)    # (BK, 1)
+            hc = stats_c_ref[..., 1:2].astype(jnp.float32)    # (BN, 1)
+            d = d + lam * jnp.abs(hr - hc.T)
+        o_ref[...] = d
 
 
 def _gram_rows_padded(rows: jnp.ndarray, x: jnp.ndarray,
                       stats_rows: jnp.ndarray, stats_all: jnp.ndarray,
                       row_ids: jnp.ndarray, lam: float, eps: float,
                       bk: int, bn: int, block_c: int,
-                      interpret: bool) -> jnp.ndarray:
+                      interpret: bool,
+                      epilogue: str = "arccos") -> jnp.ndarray:
     """Strip kernel on already padded buffers.
 
     rows (k_pad, c_pad), x (n_pad, c_pad), stats (k_pad, 2)/(n_pad, 2)
     with nonzero norms on padded entries, row_ids (k_pad, 1) int32 with
     -1 on padded entries (never matches a live column).
     """
+    if epilogue not in EPILOGUES:
+        raise ValueError(f"unknown epilogue {epilogue!r}; expected one "
+                         f"of {EPILOGUES}")
     k_pad, c_pad = rows.shape
     n_pad = x.shape[0]
     grid = (k_pad // bk, n_pad // bn, c_pad // block_c)
     return pl.pallas_call(
         functools.partial(_gram_row_kernel, lam=lam, eps=eps,
-                          block_n=bn),
+                          block_n=bn, epilogue=epilogue),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bk, block_c), lambda i, j, k: (i, k)),  # rows
@@ -139,14 +170,18 @@ def _strip_operands(x_pad: jnp.ndarray, stats: jnp.ndarray,
 
 @functools.partial(jax.jit,
                    static_argnames=("lam", "block_n", "block_c",
-                                    "gram_in_bf16", "interpret"))
+                                    "gram_in_bf16", "interpret",
+                                    "epilogue"))
 def gram_row_update_pallas(updates: jnp.ndarray, stats: jnp.ndarray,
                            ids: jnp.ndarray, lam: float = 10.0,
                            block_n: int = 128, block_c: int = 512,
                            gram_in_bf16: bool = False,
-                           interpret: bool = True) -> jnp.ndarray:
-    """(N, C), (N, 2) stats, (K,) ids -> (K, N) Eq. 9 distance strip.
+                           interpret: bool = True,
+                           epilogue: str = "arccos") -> jnp.ndarray:
+    """(N, C), (N, 2) stats, (K,) ids -> (K, N) distance strip.
 
+    ``epilogue`` picks the distance (see :data:`EPILOGUES`): "arccos"
+    is the Eq. 9 strip, "cosine"/"l2" serve the full-update baselines.
     ``stats`` must already hold the CURRENT [norm, Ĥ] of every row
     (including the refreshed ones); this is just the tiled strip
     product + epilogue.  ``cached_selection_step_pallas`` wraps it with
@@ -160,7 +195,8 @@ def gram_row_update_pallas(updates: jnp.ndarray, stats: jnp.ndarray,
     rows, x, stats_rows, stats_all, row_ids, _ = _strip_operands(
         x, stats, ids, n, gram_in_bf16)
     strip = _gram_rows_padded(rows, x, stats_rows, stats_all, row_ids,
-                              lam, 1e-8, _BK, bn, block_c, interpret)
+                              lam, 1e-8, _BK, bn, block_c, interpret,
+                              epilogue=epilogue)
     return strip[:k, :n]
 
 
@@ -211,3 +247,48 @@ def cached_selection_step_pallas(updates: jnp.ndarray, dist: jnp.ndarray,
     dist = dist.at[ids].set(strip)
     dist = dist.at[:, ids].set(strip.T)
     return stats[:, 1], dist, stats
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("metric", "block_n", "block_c",
+                                    "gram_in_bf16", "interpret"))
+def cached_feature_step_pallas(feats: jnp.ndarray, dist: jnp.ndarray,
+                               stats: jnp.ndarray, ids: jnp.ndarray,
+                               metric: str = "cosine",
+                               block_n: int = 128, block_c: int = 512,
+                               gram_in_bf16: bool = False,
+                               interpret: bool = True):
+    """Incremental FULL-UPDATE distance step (CS/DivFL), kernel path.
+
+    (N, F) flattened-update features + cached (dist (N, N), stats
+    (N, 2) = [L2 norm, 0]) + (K,) refreshed ids -> (dist, stats) with
+    rows/cols of ``ids`` recomputed through the strip kernel and
+    re-symmetrized — O(K·N·F) instead of O(N²·F).  ``metric`` is the
+    selector's own distance: "cosine" (Clustered Sampling's angular
+    distance) or "l2" (DivFL's Euclidean).  The stats lane layout
+    matches the HiCS cache (entropy lane carried as zero) so ONE state
+    pytree serves every cached selector.  K = 0 returns the cache
+    unchanged; duplicate ids are harmless.
+    """
+    if metric not in ("cosine", "l2"):
+        raise ValueError(f"unknown metric {metric!r}; expected "
+                         "'cosine' or 'l2'")
+    n, c = feats.shape
+    k = ids.shape[0]
+    if k == 0:
+        return dist, stats
+    bn, n_pad, c_pad = _gram_blocks(n, c, block_n, block_c)
+    x = jnp.pad(feats.astype(jnp.float32), ((0, n_pad - n),
+                                            (0, c_pad - c)))
+    rows_f32 = x[ids]                                   # (K, c_pad)
+    norms = jnp.sqrt(jnp.sum(rows_f32 * rows_f32, axis=-1))
+    stats = stats.at[ids].set(
+        jnp.stack([norms, jnp.zeros_like(norms)], axis=-1))
+    rows, xg, stats_rows, stats_all, row_ids, _ = _strip_operands(
+        x, stats, ids, n, gram_in_bf16)
+    strip = _gram_rows_padded(rows, xg, stats_rows, stats_all, row_ids,
+                              0.0, 1e-8, _BK, bn, block_c, interpret,
+                              epilogue=metric)[:k, :n]
+    # the oracle's scatter (transpose-averaged K×K block) keeps the
+    # exact-symmetry invariant identical across backends
+    return ref._scatter_strip_symmetric(dist, strip, ids), stats

@@ -7,7 +7,10 @@ paths are bit-for-bit validated against ``ref.py`` by the test suite.
     estimate_entropies(updates, T)          (N, C) -> (N,)
     hics_selection_step(updates, T, lam)    (N, C) -> ((N,), (N, N))
     hics_selection_step_cached(...)         K-row incremental refresh
-    gram_row_update(updates, stats, ids)    (K, N) Eq. 9 distance strip
+    cached_feature_step(feats, ...)         K-row refresh, cosine/L2
+                                            metric (CS / DivFL)
+    gram_row_update(updates, stats, ids)    (K, N) distance strip
+                                            (arccos / cosine / l2)
     pairwise_distances(updates, T, lam)     (N, C) -> (N, N)   [Eq. 9]
     gqa_decode_attention(q, k, v, length)   one-token flash decode
 """
@@ -21,7 +24,8 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.fused_stats import fused_stats_pallas
-from repro.kernels.gram_update import (cached_selection_step_pallas,
+from repro.kernels.gram_update import (cached_feature_step_pallas,
+                                       cached_selection_step_pallas,
                                        gram_row_update_pallas)
 from repro.kernels.hetero_entropy import entropy_pallas
 from repro.kernels.pairwise import (hics_selection_step_pallas,
@@ -122,23 +126,63 @@ def _cached_step_ref_jit(updates, dist, stats, ids, temperature, lam,
 def gram_row_update(updates: jnp.ndarray, stats: jnp.ndarray,
                     ids: jnp.ndarray, lam: float = 10.0,
                     gram_in_bf16: bool = False,
+                    epilogue: str = "arccos",
                     use_pallas: bool | None = None) -> jnp.ndarray:
-    """(N, C), (N, 2) current [norm, Ĥ], (K,) ids -> (K, N) Eq. 9
-    distance strip — the raw K×N Gram/arccos product behind the cached
-    step, for callers that manage their own scatter.  Pallas (MXU
-    tiles, optional bf16 operands / f32 accumulation) on TPU; jitted
-    lax fallback on CPU."""
+    """(N, C), (N, 2) current [norm, Ĥ], (K,) ids -> (K, N) distance
+    strip — the raw K×N Gram product + epilogue behind the cached
+    steps, for callers that manage their own scatter.  ``epilogue``
+    picks the distance: "arccos" (Eq. 9, HiCS), "cosine" (CS) or "l2"
+    (DivFL).  Pallas (MXU tiles, optional bf16 operands / f32
+    accumulation) on TPU; jitted lax fallback on CPU."""
     use = _on_tpu() if use_pallas is None else use_pallas
     if use:
         return gram_row_update_pallas(updates, stats, ids, lam=lam,
                                       gram_in_bf16=gram_in_bf16,
+                                      epilogue=epilogue,
                                       interpret=not _on_tpu())
-    return _gram_row_update_lax(updates, stats, ids, lam)
+    return _gram_row_update_lax(updates, stats, ids, lam, epilogue)
 
 
-@functools.partial(jax.jit, static_argnums=(3,))
-def _gram_row_update_lax(updates, stats, ids, lam):
-    return ref.distance_strip_ref(updates, stats, ids, lam)
+@functools.partial(jax.jit, static_argnums=(3, 4))
+def _gram_row_update_lax(updates, stats, ids, lam, epilogue):
+    return ref.distance_strip_ref(updates, stats, ids, lam,
+                                  epilogue=epilogue)
+
+
+def cached_feature_step(feats: jnp.ndarray, dist: jnp.ndarray,
+                        stats: jnp.ndarray, ids: jnp.ndarray,
+                        metric: str = "cosine",
+                        gram_in_bf16: bool = False,
+                        use_pallas: bool | None = None):
+    """Incremental full-update distance step (the CS/DivFL analogue of
+    ``hics_selection_step_cached``):
+
+        (N, F) features, cached (dist (N, N), stats (N, 2) = [norm, 0]),
+        (K,) refreshed ids  ->  (dist, stats)
+
+    Only the rows/cols of ``ids`` are recomputed through the strip
+    kernel and re-symmetrized — O(K·N·F) per round instead of the
+    from-scratch O(N²·F) matrix build.  ``metric`` is the selector's
+    own distance ("cosine" for Clustered Sampling, "l2" for DivFL).
+    Same caller-owned invariant as the HiCS step: every row must have
+    been refreshed since its feature row last changed (the functional
+    cs/divfl selectors stale exactly the rows ``update`` writes and
+    refresh them at the top of the next ``select``).  Duplicate ids are
+    harmless; K = 0 returns the cache unchanged.  Pallas on TPU, jitted
+    oracle on CPU.
+    """
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return cached_feature_step_pallas(
+            feats, dist, stats, ids, metric=metric,
+            gram_in_bf16=gram_in_bf16, interpret=not _on_tpu())
+    return _cached_feature_step_ref_jit(feats, dist, stats, ids, metric)
+
+
+@functools.partial(jax.jit, static_argnums=(4,))
+def _cached_feature_step_ref_jit(feats, dist, stats, ids, metric):
+    return ref.cached_feature_step_ref(feats, dist, stats, ids,
+                                       metric=metric)
 
 
 def pairwise_distances(updates: jnp.ndarray, temperature: float,

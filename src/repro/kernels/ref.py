@@ -103,19 +103,91 @@ def cached_selection_step_ref(updates: jnp.ndarray, dist: jnp.ndarray,
 
 def distance_strip_ref(updates: jnp.ndarray, stats: jnp.ndarray,
                        ids: jnp.ndarray, lam: float,
-                       eps: float = 1e-8) -> jnp.ndarray:
-    """(N, C), (N, 2) current [norm, Ĥ] stats, (K,) ids -> (K, N) Eq. 9
+                       eps: float = 1e-8,
+                       epilogue: str = "arccos") -> jnp.ndarray:
+    """(N, C), (N, 2) current [norm, Ĥ] stats, (K,) ids -> (K, N)
     distance strip — the lax oracle for the ``gram_row_update`` kernel.
-    Unit rows are built exactly as :func:`pairwise_distance_ref` builds
-    them, with the cached norms standing in for the full norm sweep."""
+
+    ``epilogue`` picks the distance the K×N Gram product feeds:
+
+      arccos — Eq. 9: arccos cosine + λ|ΔĤ| (stats = [norm, Ĥ]) — HiCS
+      cosine — angular distance alone (stats[:, 1] ignored) — CS [11]
+      l2     — Euclidean √(|a|² + |b|² − 2⟨a, b⟩) from the cached
+               norms (stats[:, 1] ignored) — DivFL [2]
+
+    Unit rows for the cosine family are built exactly as
+    :func:`pairwise_distance_ref` builds them, with the cached norms
+    standing in for the full norm sweep.  The true diagonal is zeroed
+    for every epilogue.
+    """
     x = updates.astype(jnp.float32)
-    unit = x / jnp.clip(stats[:, 0:1], eps, None)
-    cos = jnp.clip(unit[ids] @ unit.T, -1.0 + 1e-7, 1.0 - 1e-7)
-    ang = jnp.arccos(cos)
-    ang = jnp.where(ids[:, None] == jnp.arange(x.shape[0])[None, :],
-                    0.0, ang)
-    h_all = stats[:, 1]
-    return ang + lam * jnp.abs(stats[ids, 1][:, None] - h_all[None, :])
+    if epilogue == "l2":
+        nr = stats[ids, 0]
+        nc = stats[:, 0]
+        dot = x[ids] @ x.T
+        d = jnp.sqrt(jnp.clip(
+            nr[:, None] ** 2 + nc[None, :] ** 2 - 2.0 * dot, 0.0, None))
+    elif epilogue in ("arccos", "cosine"):
+        unit = x / jnp.clip(stats[:, 0:1], eps, None)
+        cos = jnp.clip(unit[ids] @ unit.T, -1.0 + 1e-7, 1.0 - 1e-7)
+        d = jnp.arccos(cos)
+    else:
+        raise ValueError(f"unknown epilogue {epilogue!r}; expected "
+                         "'arccos', 'cosine' or 'l2'")
+    d = jnp.where(ids[:, None] == jnp.arange(x.shape[0])[None, :],
+                  0.0, d)
+    if epilogue == "arccos":
+        h_all = stats[:, 1]
+        d = d + lam * jnp.abs(stats[ids, 1][:, None] - h_all[None, :])
+    return d
+
+
+def cached_feature_step_ref(feats: jnp.ndarray, dist: jnp.ndarray,
+                            stats: jnp.ndarray, ids: jnp.ndarray,
+                            metric: str = "cosine",
+                            eps: float = 1e-8):
+    """Oracle for the INCREMENTAL full-update distance step (CS/DivFL).
+
+    The full-update baselines build an (N, N) similarity matrix from
+    flattened-update features each round, but only the rows whose
+    features changed since the last refresh need recomputing — the same
+    K-row caching Alg. 1 gave HiCS, with the Eq. 9 epilogue swapped for
+    the selector's own metric (``cosine`` for Clustered Sampling,
+    ``l2`` for DivFL).  Given the cached ``dist`` (N, N) and per-row
+    ``stats`` (N, 2) = [L2 norm, 0] this refreshes ONLY the rows/cols
+    of ``ids`` — O(K·N·F) instead of O(N²·F) — and returns
+    ``(dist, stats)``.  Duplicate ids are harmless; K = 0 returns the
+    cache unchanged.  stats[:, 1] is carried (zero) purely so the cache
+    pytree matches the HiCS layout and one state field serves all
+    cached selectors.
+    """
+    x = feats.astype(jnp.float32)
+    if ids.shape[0] == 0:
+        return dist, stats
+    rows = x[ids]                                         # (K, F)
+    n_rows = jnp.linalg.norm(rows, axis=-1)
+    stats = stats.at[ids].set(
+        jnp.stack([n_rows, jnp.zeros_like(n_rows)], axis=-1))
+    strip = distance_strip_ref(x, stats, ids, 0.0, eps=eps,
+                               epilogue=metric)
+    return _scatter_strip_symmetric(dist, strip, ids), stats
+
+
+def _scatter_strip_symmetric(dist: jnp.ndarray, strip: jnp.ndarray,
+                             ids: jnp.ndarray) -> jnp.ndarray:
+    """Write a (K, N) strip into rows AND columns ``ids`` of ``dist``,
+    keeping the result exactly symmetric.  Off-block entries get the
+    strip value and its exact transpose; the K×K block is averaged with
+    its transpose first because XLA's fused L2 epilogue is free to
+    evaluate (u, v) and (v, u) with different instruction schedules —
+    1-ulp asymmetries that an ``exactly symmetric`` invariant (the
+    ``precomputed=True`` clustering fast path) cannot tolerate.
+    Duplicate ids are safe: their strip rows are identical, so every
+    candidate value of a contested scatter slot is equal."""
+    kk = strip[:, ids]                                    # (K, K)
+    dist = dist.at[ids].set(strip)
+    dist = dist.at[:, ids].set(strip.T)
+    return dist.at[ids[:, None], ids[None, :]].set(0.5 * (kk + kk.T))
 
 
 def pairwise_distance_ref(updates: jnp.ndarray, entropies: jnp.ndarray,

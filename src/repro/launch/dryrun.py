@@ -76,7 +76,7 @@ def run_combo(arch: str, shape_name: str, mesh_name: str,
     if not supports_shape(cfg, shape):
         rec["status"] = "skipped"
         rec["reason"] = (f"long_context_mode={cfg.long_context_mode} "
-                         "(see DESIGN.md §6)")
+                         "(see configs/base.py)")
         return rec
 
     mesh = make_production_mesh(multi_pod=(mesh_name == "pod2"))

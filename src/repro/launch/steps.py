@@ -19,8 +19,8 @@ def make_train_step(api, optimizer, *, dtype=jnp.bfloat16,
     """cast_params_bf16: mixed-precision compute copy — f32 master params
     are cast to bf16 ONCE per step before the layer scan, so the FSDP
     all-gathers and the gradient all-reduces move bf16 instead of f32
-    (2x wire reduction; §Perf iteration 2 in EXPERIMENTS.md).  The
-    optimizer still updates the f32 masters."""
+    (2x wire reduction).  The optimizer still updates the f32
+    masters."""
     def train_step(state, batch):
         def lf(p):
             if cast_params_bf16:

@@ -70,8 +70,7 @@ def moe_block(p, x, moe_cfg, mlp_kind: str = "swiglu"
     # Dispatch is local to each batch row, so every tensor here is pinned
     # batch-sharded: without the constraints GSPMD bounces the expert
     # buffers between batch- and feature-sharded layouts around the
-    # scatter/gather, paying full-tensor all-reduces per layer (§Perf
-    # iteration 3 in EXPERIMENTS.md).
+    # scatter/gather, paying full-tensor all-reduces per layer.
     xr = jnp.repeat(x, K, axis=1)                            # (B, S*K, d)
     xr = constrain(xr, "batch", None, None)
 

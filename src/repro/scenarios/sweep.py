@@ -44,7 +44,8 @@ from repro.core import (SELECTORS, Observations, head_bias_updates_stacked,
                         head_num_classes, make_functional)
 from repro.data import SyntheticSpec
 from repro.fed.client import LocalSpec, make_eval_fn, make_local_update
-from repro.fed.server import _SCANNABLE, FedConfig, FederatedServer
+from repro.fed.server import (_SCANNABLE, FedConfig, FederatedServer,
+                              full_sel_updates, make_grad_all)
 from repro.models.classifier import make_classifier
 from repro.scenarios.availability import availability_mask, masked_select
 from repro.scenarios.partition_jax import Partition
@@ -89,16 +90,26 @@ class SweepSpec:
         return scn
 
 
-def seed_keychain(seed: int, rounds: int):
+def seed_keychain(seed: int, rounds: int, grad_keys: bool = False):
     """Replicates ``FederatedServer`` + selector-shim key chains for one
-    seed: (params-init key, selector-init key, (T, ...) round keys)."""
+    seed: (params-init key, selector-init key, (T, ...) round keys).
+
+    ``grad_keys=True`` reproduces the host loop's chain for ``full_all``
+    selectors (DivFL's all-clients gradient poll splits one extra key
+    per round, interleaved with the round keys) and appends the (T, ...)
+    grad-key array as a fourth element."""
     rng = jax.random.PRNGKey(int(seed))
     rng, k_init = jax.random.split(rng)
-    round_keys = []
+    round_keys, gkeys = [], []
     for _ in range(rounds):
         rng, kr = jax.random.split(rng)
         round_keys.append(kr)
+        if grad_keys:
+            rng, kg = jax.random.split(rng)
+            gkeys.append(kg)
     _, k_sel = jax.random.split(jax.random.PRNGKey(int(seed)))
+    if grad_keys:
+        return k_init, k_sel, jnp.stack(round_keys), jnp.stack(gkeys)
     return k_init, k_sel, jnp.stack(round_keys)
 
 
@@ -111,11 +122,22 @@ def _normalized_weights(mask_np: np.ndarray) -> jnp.ndarray:
     return wd / jnp.sum(wd)
 
 
-def _make_selector_fn(spec: SweepSpec, name: str, num_classes: int):
+def _probe_requires(spec: SweepSpec, name: str) -> frozenset:
+    """A selector's effective requirements (factory kwargs can move it
+    between classes, e.g. divfl's ``refresh="selected"``), probed from
+    a throwaway tiny instance — factories are pure closures, so this
+    costs nothing and never touches device buffers."""
     if name not in SELECTORS:
         raise KeyError(f"unknown selector {name!r}; known: "
                        f"{sorted(SELECTORS)}")
-    requires = SELECTORS[name].requires
+    return make_functional(name, num_clients=2, num_select=1,
+                           total_rounds=1,
+                           **dict(spec.selector_kw or {})).requires
+
+
+def _make_selector_fn(spec: SweepSpec, name: str, num_classes: int,
+                      param_count: int):
+    requires = _probe_requires(spec, name)
     unmet = requires - _SWEEPABLE
     if unmet:
         raise ValueError(
@@ -124,6 +146,8 @@ def _make_selector_fn(spec: SweepSpec, name: str, num_classes: int):
     kw = dict(spec.selector_kw or {})
     if "bias_sel" in requires:
         kw.setdefault("num_classes", num_classes)
+    if requires & {"full_all", "full_sel"}:
+        kw.setdefault("feat_dim", param_count)
     return make_functional(name, num_clients=spec.num_clients,
                            num_select=spec.num_select,
                            total_rounds=spec.rounds, **kw)
@@ -147,6 +171,12 @@ def make_seed_runner(spec: SweepSpec, scenario: Scenario, fn, apply_fn,
     eval_v = jax.vmap(lambda p, cx, cy, cm: eval_fn(p, cx, cy, cm),
                       in_axes=(None, 0, 0, 0))
     need_losses = "loss_all" in fn.requires
+    need_full_sel = "full_sel" in fn.requires
+    need_full_all = "full_all" in fn.requires
+    if need_full_all:
+        # DivFL's ideal setting — the server's own grad-poll builder,
+        # so the drivers can't drift apart
+        grad_all_v = make_grad_all(apply_fn, spec.local)
     time_varying = scenario.time_varying
     has_entropies = fn.entropies is not None
 
@@ -155,7 +185,11 @@ def make_seed_runner(spec: SweepSpec, scenario: Scenario, fn, apply_fn,
 
         def round_step(carry, xs):
             params, sstate = carry
-            t, kr = xs
+            if need_full_all:          # round_keys rows are (kr, kg)
+                t, key_pair = xs
+                kr, kg = key_pair[0], key_pair[1]
+            else:
+                t, kr = xs
             k_sel, k_loc = jax.random.split(kr)
             if time_varying:
                 avail = availability_mask(scenario, cfg_n, t,
@@ -172,11 +206,17 @@ def make_seed_runner(spec: SweepSpec, scenario: Scenario, fn, apply_fn,
             bias_updates = head_bias_updates_stacked(params, new_params)
             params = jax.tree_util.tree_map(
                 lambda stacked: jnp.mean(stacked, axis=0), new_params)
-            losses = None
+            losses = full_updates = None
             if need_losses:
                 losses, _ = eval_v(params, x[idx], y[idx], mask)
+            if need_full_all:
+                full_updates = grad_all_v(params, x[idx], y[idx], mask,
+                                          jax.random.split(kg, cfg_n))
+            elif need_full_sel:
+                full_updates = full_sel_updates(params, new_params)
             sstate = fn.update(sstate, t, ids, Observations(
-                bias_updates=bias_updates, losses=losses))
+                bias_updates=bias_updates, full_updates=full_updates,
+                losses=losses))
             ent = (jnp.mean(fn.entropies(sstate)) if has_entropies
                    else jnp.float32(0.0))
             _, acc = eval_fn(params, test["x"], test["y"], test["mask"])
@@ -229,20 +269,27 @@ def build_pair(spec: SweepSpec, scenario_name: str,
                                   spec.data_seed)
     init_fn, apply_fn, _ = make_classifier(cfg, input_dim=scn.data.dim)
 
-    chains = [seed_keychain(s, spec.rounds) for s in spec.seeds]
+    need_gk = "full_all" in _probe_requires(spec, selector)
+    chains = [seed_keychain(s, spec.rounds, grad_keys=need_gk)
+              for s in spec.seeds]
     k_inits = jnp.stack([c[0] for c in chains])
     k_sels = jnp.stack([c[1] for c in chains])
-    round_keys = jnp.stack([c[2] for c in chains])
+    if need_gk:     # (S, T, 2, key) rows of (round key, grad-poll key)
+        round_keys = jnp.stack(
+            [jnp.stack([c[2], c[3]], axis=1) for c in chains])
+    else:
+        round_keys = jnp.stack([c[2] for c in chains])
 
     part_keys = jnp.stack([scenario_key(scn, int(s)) for s in spec.seeds])
     parts = jax.vmap(lambda key: scn.partition(
         key, train["y"], num_classes, spec.num_clients, cap))(part_keys)
 
     params0 = jax.vmap(init_fn)(k_inits)
+    params_one = jax.tree_util.tree_map(lambda l: l[0], params0)
     fn = _make_selector_fn(spec, selector,
-                           head_num_classes(
-                               jax.tree_util.tree_map(lambda l: l[0],
-                                                      params0)) or 1)
+                           head_num_classes(params_one) or 1,
+                           sum(x.size for x in
+                               jax.tree_util.tree_leaves(params_one)))
     sstate0 = jax.vmap(fn.init)(k_sels)
     weights = jnp.stack([_normalized_weights(np.asarray(parts.mask[i]))
                          for i in range(len(spec.seeds))])
@@ -294,9 +341,13 @@ def run_sweep(spec: SweepSpec, progress: bool = False) -> Dict[str, Any]:
 
 
 def run_host_reference(spec: SweepSpec, scenario_name: str, selector: str,
-                       seed: int) -> Dict[str, list]:
-    """One seed through the ``FederatedServer`` HOST loop on the same
-    dataset/partition the sweep engine uses — the parity oracle."""
+                       seed: int, jit_rounds: bool = False
+                       ) -> Dict[str, list]:
+    """One seed through the ``FederatedServer`` on the same dataset/
+    partition the sweep engine uses — the parity oracle.  Default is
+    the HOST loop; ``jit_rounds=True`` drives the server's scanned
+    loop instead (used to pin sweep == scanned-server exactness where
+    fp tie-breaking separates both from the host loop)."""
     scn = spec.scenario(scenario_name)
     if scn.time_varying:
         raise ValueError("the server loop has no availability schedule; "
@@ -315,7 +366,8 @@ def run_host_reference(spec: SweepSpec, scenario_name: str, selector: str,
         rounds=spec.rounds, selector=selector,
         selector_kw=spec.selector_kw, local=spec.local,
         eval_every=spec.rounds, seed=seed,
-        lr_decay_every=spec.lr_decay_every, lr_decay=spec.lr_decay)
+        lr_decay_every=spec.lr_decay_every, lr_decay=spec.lr_decay,
+        jit_rounds=jit_rounds)
     server = FederatedServer.from_partition(
         init_fn, apply_fn, fed_cfg, train["x"], train["y"], part,
         test={k: np.asarray(v) for k, v in test.items()})

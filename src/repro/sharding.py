@@ -31,8 +31,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 class ShardingPolicy:
     """Maps logical axis names -> mesh axis names for one mesh.
 
-    ``mode`` selects the parallelism scheme (found via §Perf iteration;
-    see EXPERIMENTS.md):
+    ``mode`` selects the parallelism scheme (found via perf iteration
+    on the ``launch.dryrun`` grid):
       "2d"   — FSDP over (pod, data) × tensor-parallel over 'model'
                (the baseline; activations pay per-layer TP collectives)
       "fsdp" — every mesh axis is a data/FSDP axis; params are fully

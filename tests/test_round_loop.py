@@ -60,10 +60,16 @@ def test_scan_parity_other_selectors(selector):
 
 
 @pytest.mark.parametrize("selector", ["cs", "divfl"])
-def test_full_update_selectors_rejected(selector):
-    server, _ = build(_spec(selector, True, rounds=2))
-    with pytest.raises(ValueError, match="jit_rounds"):
-        server.run()
+def test_full_update_selectors_scan(selector):
+    """CS/DivFL ride the scanned loop: their full-update observations
+    (participant deltas / the all-clients gradient poll) are computed
+    inside the jitted round step.  The 30-round host/scan/sweep parity
+    battery lives in tests/test_full_update_selectors.py — this is the
+    gating smoke check."""
+    server, _ = build(_spec(selector, True, rounds=4))
+    hist = server.run()
+    assert len(hist["round"]) == 4
+    assert all(len(ids) == 3 for ids in hist["selected"])
 
 
 def test_scan_state_writeback():

@@ -123,9 +123,14 @@ def test_host_reference_rejects_time_varying():
 
 
 @pytest.mark.parametrize("selector", ["cs", "divfl"])
-def test_full_update_selectors_rejected(selector):
-    with pytest.raises(ValueError, match="sweep engine"):
-        build_pair(SPEC, "dir_mild", selector)
+def test_full_update_selectors_buildable(selector):
+    """CS/DivFL are sweepable: build_pair sizes their feature buffers
+    from the model and stacks selector state over seeds.  Sweep-vs-host
+    parity for them lives in tests/test_full_update_selectors.py."""
+    pair = build_pair(SPEC, "dir_mild", selector)
+    assert pair.sstate0.feats.shape[0] == len(SPEC.seeds)
+    assert pair.sstate0.feats.shape[1] == SPEC.num_clients
+    assert pair.sstate0.feats.shape[2] > 1      # |θ|-sized features
 
 
 def test_stateful_local_algos_rejected():

@@ -1,0 +1,133 @@
+"""Sync vs buffered-async training under system heterogeneity.
+
+Drives the same (data, partition, model, selector) through the sync
+scanned server and the buffered-async server (``repro.fed.
+async_server``) across a ladder of latency models — identity (the
+parity configuration), two straggler severities, heavy-tail and burst
+arrivals — and records per-configuration throughput, the tick at which
+train loss first reaches a shared target, and the buffer-fill /
+aggregation-trigger counters ``bench_overhead._drive`` reports when
+handed an async server.  Lands in ``BENCH_async.json`` at the repo
+root so the sync-vs-async trajectory is tracked per PR (CI uploads it
+as an artifact).
+
+Throughput numbers include each driver's one-off scan compile — the
+same "what one run actually pays" convention BENCH_round_loop.json
+uses for the host loop.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.bench_overhead import _drive
+from benchmarks.common import md_table, save_result
+from repro.configs import get_config
+from repro.fed import (AsyncConfig, AsyncFederatedServer, FedConfig,
+                       FederatedServer, LatencySpec, LocalSpec,
+                       ticks_to_loss)
+from repro.models.classifier import make_classifier
+from repro.scenarios import get_scenario, make_dataset, materialize
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+N, K, SEED = 20, 4, 0
+
+#: increasing system heterogeneity, ≥ 3 non-identity traffic shapes
+LADDER = (
+    ("identity", LatencySpec()),
+    ("stragglers_20pct", LatencySpec(kind="stragglers",
+                                     straggler_frac=0.2,
+                                     straggler_delay=4, seed=1)),
+    ("stragglers_40pct", LatencySpec(kind="stragglers",
+                                     straggler_frac=0.4,
+                                     straggler_delay=8, seed=1)),
+    ("heavy_tail", LatencySpec(kind="lognormal", mu=0.5, scale=0.9,
+                               seed=1)),
+    ("flash_crowd", LatencySpec(kind="flash_crowd", period=6)),
+)
+
+
+def _build(samples: int = 600):
+    scn = get_scenario("dir_severe")
+    cfg = get_config("paper-mlp")
+    train, _, _ = make_dataset(scn, samples, 120, cfg.vocab_size, 0)
+    cap = min(samples, max(1, 4 * samples // N))
+    part = materialize(scn, SEED, train, cfg.vocab_size, N, cap)
+    init_fn, apply_fn, _ = make_classifier(cfg, input_dim=scn.data.dim)
+    idx = np.asarray(part.idx)
+    return (init_fn, apply_fn, train, part,
+            np.asarray(train["x"])[idx], np.asarray(train["y"])[idx],
+            np.asarray(part.mask))
+
+
+def main(quick: bool = True):
+    print("== bench_async (sync vs buffered-async) ==", flush=True)
+    ticks = 40 if quick else 200
+    local = LocalSpec(algo="fedavg", optimizer="sgd", lr=0.1, epochs=1,
+                      batch_size=32)
+    init_fn, apply_fn, train, part, cx, cy, cm = _build()
+
+    fs = FederatedServer.from_partition(
+        init_fn, apply_fn,
+        FedConfig(num_clients=N, num_select=K, rounds=ticks,
+                  selector="hics", local=local, eval_every=10 ** 6,
+                  seed=SEED, jit_rounds=True),
+        train["x"], train["y"], part)
+    t0 = time.perf_counter()
+    sh = fs.run()
+    sync_s = time.perf_counter() - t0
+    first, best = sh["train_loss"][0], min(sh["train_loss"])
+    target = best + 0.25 * (first - best)
+    sync_tt = next((t for t, l in enumerate(sh["train_loss"])
+                    if l <= target), None)
+    out = {
+        "what": "sync scanned loop vs buffered-async server (hics, "
+                "dir_severe partition) under increasing straggler "
+                "severity; wall times include the one-off scan compile",
+        "ticks": ticks, "num_clients": N, "num_select": K,
+        "capacity": 2 * K, "threshold": K, "beta": 0.5,
+        "target_loss": float(target),
+        "sync": {"rounds_per_s": ticks / sync_s,
+                 "rounds_to_target": sync_tt,
+                 "final_loss": float(sh["train_loss"][-1])},
+        "async": {},
+    }
+    print(f"  sync: {ticks / sync_s:6.2f} rounds/s  "
+          f"to-target={sync_tt}", flush=True)
+    rows = [["sync", f"{ticks / sync_s:.2f}", str(sync_tt),
+             "-", "-", "-"]]
+    for name, lat in LADDER:
+        acfg = AsyncConfig(num_clients=N, num_select=K, ticks=ticks,
+                           selector="hics", local=local, capacity=2 * K,
+                           threshold=K, beta=0.5, latency=lat,
+                           seed=SEED)
+        srv = AsyncFederatedServer(init_fn, apply_fn, acfg, cx, cy, cm)
+        stats = _drive(srv)
+        h = stats.pop("history")
+        tps = 1.0 / max(stats["s_per_tick"], 1e-12)
+        cell = {"ticks_per_s": tps,
+                "ticks_to_target": ticks_to_loss(h, target),
+                "final_loss": float(h["train_loss"][-1]), **stats}
+        out["async"][name] = cell
+        rows.append([name, f"{tps:.2f}", str(cell["ticks_to_target"]),
+                     str(cell["aggregations"]),
+                     f"{cell['mean_fill']:.2f}",
+                     str(cell["dropped_total"])])
+        print(f"  async/{name:17s} {tps:6.2f} ticks/s  "
+              f"to-target={cell['ticks_to_target']}  "
+              f"aggs={cell['aggregations']}  "
+              f"dropped={cell['dropped_total']}", flush=True)
+    save_result("async_server", out)
+    (REPO_ROOT / "BENCH_async.json").write_text(json.dumps(out,
+                                                           indent=1))
+    print(f"  wrote {REPO_ROOT / 'BENCH_async.json'}", flush=True)
+    print(md_table(["config", "ticks/s", "to-target", "aggregations",
+                    "mean fill", "dropped"], rows))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -23,11 +23,30 @@ N, K, T = 50, 5, 100
 REPO_ROOT = Path(__file__).resolve().parent.parent
 
 
-def _drive(sel, db, full, losses, rounds=8, warmup: int = 2) -> float:
+def _drive(sel, db=None, full=None, losses=None, rounds=8,
+           warmup: int = 2):
     """Steady-state s/round.  The shims jit their select/update
     transitions per instance, so the first rounds pay one-off compile
     time — warm them before starting the clock (Table 3 is about
-    per-round overhead, not compilation)."""
+    per-round overhead, not compilation).
+
+    When handed an :class:`~repro.fed.async_server.
+    AsyncFederatedServer` instead of a selector shim, drives the whole
+    async tick loop and returns a dict: per-tick wall time (first
+    ``warmup`` ticks excluded — they amortize the scan compile) plus
+    the buffer-fill / aggregation-trigger counters the run accumulated
+    (``bench_async``'s BENCH_async.json consumes these)."""
+    from repro.fed.async_server import AsyncFederatedServer
+    if isinstance(sel, AsyncFederatedServer):
+        h = sel.run()
+        wall = h["wall_s"][warmup:] or h["wall_s"]
+        return {"s_per_tick": float(np.mean(wall)),
+                "aggregations": int(h["aggregations"]),
+                "fired_frac": float(np.mean(h["fired"])),
+                "dropped_total": int(h["dropped_total"]),
+                "mean_fill": float(h["mean_fill"]),
+                "history": h}
+
     def one_round(t):
         ids = sel.select(t)
         sel.update(t, ids, bias_updates=db[ids],

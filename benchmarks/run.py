@@ -16,6 +16,8 @@ Modules:
                Fig. 3 (loss variance) across 3 heterogeneity settings
   sweep      — vmapped multi-seed sweep vs python seed loop
                (``BENCH_sweep.json``; see repro.scenarios)
+  async      — sync vs buffered-async server under straggler/burst
+               latency models (``BENCH_async.json``)
   overhead   — Table 3 (selection compute scaling vs |θ| and C)
   estimation — Figs. 5, 8-11 (Ĥ vs H, Assumption 3.1 envelope)
   kernels    — Pallas kernels vs oracles at LLM-head scale
@@ -27,8 +29,8 @@ import argparse
 import sys
 import time
 
-MODULES = ("selectors", "sweep", "overhead", "estimation", "ablations",
-           "kernels", "roofline")
+MODULES = ("selectors", "sweep", "async", "overhead", "estimation",
+           "ablations", "kernels", "roofline")
 
 
 def main():

@@ -60,12 +60,13 @@ class ClientSelector:
         self._update_jit = jax.jit(self.fn.update)
         self.select_seconds = 0.0      # cumulative selection compute time
         self.update_seconds = 0.0
-        # incremental-cache hazard tracking: a (K,)-sized staleness
-        # buffer only remembers ONE update's ids, so two updates
-        # without an intervening select would silently leave the first
-        # cohort's cached rows stale — fail fast instead (host-side
-        # only; the raw functional API documents the same contract)
-        self._refresh_pending = False
+        # incremental-cache hazard tracking: the staled-id ring holds
+        # stale_slots·K ids, so updates staling more than that without
+        # an intervening select would silently wrap around and leave
+        # the earliest cohort's cached rows stale — fail fast instead
+        # (host-side only; the raw functional API documents the same
+        # contract)
+        self._stale_pending = 0
 
     # -- functional factory (override) ---------------------------------------
     def _make_functional(self, **kw) -> FunctionalSelector:
@@ -80,7 +81,7 @@ class ClientSelector:
         if key is None:
             self._key, key = jax.random.split(self._key)
         ids, self.state = self._select_jit(self.state, t, key)
-        self._refresh_pending = False      # select refreshed the cache
+        self._stale_pending = 0            # select refreshed the cache
         out = [int(i) for i in np.asarray(ids)]
         self.select_seconds += time.perf_counter() - t0
         return out
@@ -110,20 +111,23 @@ class ClientSelector:
         # an update stales cached rows when the selector carries a
         # staleness buffer and this observation writes the buffer it
         # caches over (Δb for hics, full-update features for cs/divfl)
-        stales = self.state.stale_ids.shape[0] and (
+        ring = int(self.state.stale_ids.shape[0])
+        stales = ring and (
             (obs.bias_updates is not None and "bias_sel" in req)
             or (obs.full_updates is not None
                 and bool(req & {"full_all", "full_sel"})))
         if stales:
-            if self._refresh_pending:
+            if self._stale_pending + len(ids) > ring:
                 raise RuntimeError(
-                    f"{self.name}: update() called twice without an "
-                    "intervening select() — the incremental cache's "
-                    "staleness buffer only covers the LAST update's "
-                    "rows, so the earlier cohort would stay stale. "
-                    "Call select() between updates, or construct the "
-                    "selector with incremental=False.")
-            self._refresh_pending = True
+                    f"{self.name}: update() would stale "
+                    f"{self._stale_pending + len(ids)} cached rows but "
+                    f"the staled-id ring holds {ring} — ids from an "
+                    "earlier cohort would be overwritten and their "
+                    "rows silently stay stale without an "
+                    "intervening select(). Call select() between "
+                    "updates, construct the selector with a larger "
+                    "stale_slots, or with incremental=False.")
+            self._stale_pending += len(ids)
         self.state = self._ensure_dims(self.state, obs)
         self.state = self._update_jit(self.state, t, ids, obs)
         self.update_seconds += time.perf_counter() - t0

@@ -41,7 +41,8 @@ from repro.core.sampling import coverage_sweep_device, weighted_sample_device
 from repro.core.selectors.base import ClientSelector
 from repro.core.selectors.functional import (FunctionalSelector,
                                              init_state, mark_seen,
-                                             stale_rows, take_key)
+                                             stale_append, stale_clear,
+                                             take_key)
 from repro.kernels import cached_feature_step
 
 _LOG_FLOOR = 1e-30
@@ -154,35 +155,44 @@ def powd_functional(num_clients: int, num_select: int, total_rounds: int,
 def cs_functional(num_clients: int, num_select: int, total_rounds: int,
                   weights=None, feat_dim: int = 1,
                   proj_dim: Optional[int] = None, proj_seed: int = 0,
-                  incremental: bool = True,
+                  incremental: bool = True, stale_slots: int = 1,
                   **_kw) -> FunctionalSelector:
     """Clustered Sampling [11]: ward clustering of the participants'
     full updates under the angular (arccos cosine) distance, one pick
     per cluster ∝ p_k.  ``feat_dim`` is the RAW flattened-update width
     the server observes; ``proj_dim``/``proj_seed`` bound the stored
-    features and ``incremental`` enables the K-row distance cache (see
-    the module docstring)."""
+    features, ``incremental`` enables the K-row distance cache and
+    ``stale_slots`` sizes its staled-id ring (see the module
+    docstring and ``functional.stale_append``)."""
     n = int(num_clients)
     k = min(int(num_select), n)
     project, feat_width = _make_projector(proj_dim, int(proj_seed))
     f_dim = max(1, feat_width(int(feat_dim)))
     incremental = bool(incremental)
+    stale_len = k * max(1, int(stale_slots))
 
     def init(key):
         return init_state(key, n, weights, feat_dim=f_dim,
                           dist_cache=incremental,
-                          stale_len=k if incremental else 0)
+                          stale_len=stale_len if incremental else 0)
 
     def select(state, t, key=None):
         state, key = take_key(state, key)
 
         if incremental:
-            # K-row refresh of the cached angular distance (idempotent
-            # on fresh rows) — the only feature-dependent compute
-            dist_c, stats_c = cached_feature_step(
-                state.feats, state.dist_cache, state.row_stats,
-                state.stale_ids, metric="cosine")
-            state = state._replace(dist_cache=dist_c, row_stats=stats_c)
+            # ring refresh of the cached angular distance (idempotent
+            # on fresh rows) — the only feature-dependent compute;
+            # skipped when nothing staled since the last refresh
+            def _refresh(_):
+                return cached_feature_step(
+                    state.feats, state.dist_cache, state.row_stats,
+                    state.stale_ids, metric="cosine")
+
+            dist_c, stats_c = jax.lax.cond(
+                state.stale_fill > 0, _refresh,
+                lambda _: (state.dist_cache, state.row_stats), 0)
+            state = stale_clear(state._replace(
+                dist_cache=dist_c, row_stats=stats_c))
 
         def warmup(key):
             # deterministic coverage like Alg. 1's first rounds
@@ -219,7 +229,7 @@ def cs_functional(num_clients: int, num_select: int, total_rounds: int,
         state = mark_seen(state._replace(
             feats=feats, hist_count=state.hist_count + 1), ids)
         if incremental:
-            state = stale_rows(state, ids, k)
+            state = stale_append(state, ids)
         return state
 
     return FunctionalSelector("cs", frozenset({"full_sel"}), init, select,
@@ -236,6 +246,7 @@ def divfl_functional(num_clients: int, num_select: int, total_rounds: int,
                      weights=None, feat_dim: int = 1,
                      proj_dim: Optional[int] = None, proj_seed: int = 0,
                      refresh: str = "all", incremental: bool = True,
+                     stale_slots: int = 1, tie_quant: float = 1e-5,
                      **_kw) -> FunctionalSelector:
     """DivFL [2]: greedy facility location on pairwise L2 distances of
     flattened updates.
@@ -258,7 +269,16 @@ def divfl_functional(num_clients: int, num_select: int, total_rounds: int,
                    computed against a never-observed row.
 
     ``feat_dim`` is the RAW flattened-update width; ``proj_dim``/
-    ``proj_seed`` bound the stored features (module docstring).
+    ``proj_seed`` bound the stored features (module docstring);
+    ``stale_slots`` sizes the incremental cache's staled-id ring.
+
+    ``tie_quant`` makes the greedy argmax deterministic across
+    backends: marginal gains are quantized to ``tie_quant`` × max|gain|
+    before the argmax, so floating-point ulp noise (which differs
+    between the host loop's per-round XLA programs and the fused
+    scan/sweep programs) cannot flip near-ties — and exact ties break
+    lexicographically toward the smallest client id (``argmax`` returns
+    the first maximum).  ``tie_quant=0`` restores raw-gain argmax.
     """
     n = int(num_clients)
     k = min(int(num_select), n)
@@ -269,20 +289,28 @@ def divfl_functional(num_clients: int, num_select: int, total_rounds: int,
     project, feat_width = _make_projector(proj_dim, int(proj_seed))
     f_dim = max(1, feat_width(int(feat_dim)))
     incremental = bool(incremental) and selected_only
+    stale_len = k * max(1, int(stale_slots))
+    tie_quant = float(tie_quant)
 
     def init(key):
         return init_state(key, n, weights, feat_dim=f_dim,
                           dist_cache=incremental,
-                          stale_len=k if incremental else 0)
+                          stale_len=stale_len if incremental else 0)
 
     def select(state, t, key=None):
         state, key = take_key(state, key)
 
         if incremental:
-            dist_c, stats_c = cached_feature_step(
-                state.feats, state.dist_cache, state.row_stats,
-                state.stale_ids, metric="l2")
-            state = state._replace(dist_cache=dist_c, row_stats=stats_c)
+            def _refresh(_):
+                return cached_feature_step(
+                    state.feats, state.dist_cache, state.row_stats,
+                    state.stale_ids, metric="l2")
+
+            dist_c, stats_c = jax.lax.cond(
+                state.stale_fill > 0, _refresh,
+                lambda _: (state.dist_cache, state.row_stats), 0)
+            state = stale_clear(state._replace(
+                dist_cache=dist_c, row_stats=stats_c))
 
         def cold(key):
             if selected_only:
@@ -305,6 +333,12 @@ def divfl_functional(num_clients: int, num_select: int, total_rounds: int,
                 chosen, taken, cover = carry
                 gains = jnp.sum(jnp.maximum(cover[None, :] - dist, 0.0),
                                 axis=1)
+                if tie_quant > 0.0:
+                    # quantize so ulp noise can't flip near-ties; exact
+                    # ties then break toward the smallest client id
+                    scale = jnp.maximum(jnp.max(jnp.abs(gains)),
+                                        _LOG_FLOOR) * tie_quant
+                    gains = jnp.round(gains / scale)
                 j = jnp.argmax(jnp.where(taken, -jnp.inf, gains))
                 return (chosen.at[i].set(j.astype(jnp.int32)),
                         taken.at[j].set(True),
@@ -332,7 +366,7 @@ def divfl_functional(num_clients: int, num_select: int, total_rounds: int,
                 feats=state.feats.at[ids].set(rows),
                 hist_count=state.hist_count + 1), ids)
             if incremental:
-                state = stale_rows(state, ids, k)
+                state = stale_append(state, ids)
             return state
         # ideal setting: only a full (N, P) poll refreshes the buffer
         if obs.full_updates.shape[0] != n:

@@ -73,9 +73,16 @@ class SelectorState(NamedTuple):
     # refreshed rows recomputed (O(K·N·C) vs O(N²·C) per round).
     dist_cache: jnp.ndarray   # (N, N) cached Eq. 9 distance (or (N, 0))
     row_stats: jnp.ndarray    # (N, 2) cached [L2 norm, Ĥ] (or (N, 0))
-    # per-client staleness: the ids whose Δb rows `update` last wrote
-    # and the next `select` must refresh.  (K,) int32, or (0,).
+    # per-client staleness: a ring of the ids whose cached rows
+    # `update` wrote since the last refresh.  (L,) int32 with
+    # L = stale_slots·K (one slot-cohort by default), or (0,).
+    # `stale_fill` counts ids appended since the last refresh — the
+    # next `select` refreshes the whole ring iff it is > 0, then
+    # resets it (slots beyond the fill hold previously refreshed ids;
+    # re-refreshing a fresh row is idempotent, so the over-refresh is
+    # harmless).
     stale_ids: jnp.ndarray
+    stale_fill: jnp.ndarray   # () int32 — ids appended since last refresh
 
 
 class FunctionalSelector(NamedTuple):
@@ -125,6 +132,7 @@ def init_state(key: jax.Array, num_clients: int, weights=None,
         dist_cache=jnp.zeros((n, n if dist_cache else 0), jnp.float32),
         row_stats=jnp.zeros((n, 2 if dist_cache else 0), jnp.float32),
         stale_ids=jnp.zeros(int(stale_len), jnp.int32),
+        stale_fill=jnp.int32(0),
     )
 
 
@@ -145,28 +153,42 @@ def mark_seen(state: SelectorState, ids: jnp.ndarray) -> SelectorState:
         seen=seen, unseen_count=jnp.sum(~seen).astype(jnp.int32))
 
 
-def stale_rows(state: SelectorState, ids, k: int) -> SelectorState:
-    """Record ``ids`` as the cached-distance rows the next ``select``
-    must refresh.  Shared by every incremental selector (hics on Δb,
-    cs/divfl on full-update features).
+def stale_append(state: SelectorState, ids) -> SelectorState:
+    """Append ``ids`` to the staled-row ring the next refresh must
+    cover.  Shared by every incremental selector (hics on Δb, cs/divfl
+    on full-update features).
 
-    The buffer is fixed at (K,): shorter id lists pad by repeating the
-    last id (an idempotent extra refresh); an empty list keeps the
-    pending staleness (nothing new to refresh, nothing refreshed yet).
-    More than K ids cannot be represented — the caller must refresh
-    between updates (the OO shim fails fast on that hazard).
+    The ring is fixed at (L,) with L = ``stale_slots``·K: appends land
+    at ``stale_fill mod L`` onward and bump the fill counter, so up to
+    ``stale_slots`` cohorts can accumulate between refreshes — the
+    buffered-async server's out-of-order arrivals.  The refreshing
+    ``select`` covers every slot (slots beyond the fill hold ids whose
+    rows are already fresh; re-refreshing them is idempotent) and
+    resets the counter via :func:`stale_clear`.  An empty id list
+    leaves pending staleness untouched.  More than L ids in ONE call
+    cannot be represented (static error); more than L ids ACROSS calls
+    wrap around and silently overwrite pending entries — sizing the
+    ring for the driver's update cadence is the caller's contract (the
+    OO shim fails fast on that hazard host-side).
     """
     ids_arr = jnp.asarray(ids, jnp.int32).reshape(-1)
     kk = ids_arr.shape[0]
-    if kk > k:
+    ring = state.stale_ids.shape[0]
+    if kk == 0:
+        return state
+    if kk > ring:
         raise ValueError(
-            f"incremental selector can refresh at most K={k} cached "
-            f"rows per round, got {kk} updated ids")
-    if kk == k:
-        stale = ids_arr
-    elif kk == 0:
-        stale = state.stale_ids
-    else:
-        stale = jnp.concatenate(
-            [ids_arr, jnp.broadcast_to(ids_arr[-1:], (k - kk,))])
-    return state._replace(stale_ids=stale)
+            f"incremental selector's staleness ring holds {ring} ids "
+            f"but one update staled {kk}; construct the selector with "
+            "a larger stale_slots (the ring must cover the largest "
+            "single cohort)")
+    pos = jnp.mod(state.stale_fill + jnp.arange(kk, dtype=jnp.int32),
+                  ring)
+    return state._replace(
+        stale_ids=state.stale_ids.at[pos].set(ids_arr),
+        stale_fill=state.stale_fill + jnp.int32(kk))
+
+
+def stale_clear(state: SelectorState) -> SelectorState:
+    """Reset the staleness counter after a refresh covered the ring."""
+    return state._replace(stale_fill=jnp.int32(0))

@@ -21,11 +21,14 @@ Two distance paths feed the clustering:
   Kept as the parity oracle (tests/test_incremental_selection.py locks
   the two paths together) and for drivers that mutate Δb out-of-band.
 
-The cache refresh runs at the top of EVERY select — including coverage
--sweep rounds — because staleness metadata only remembers the last
-``update``'s ids; refreshing an already-fresh row is idempotent, so
-the strict select→update alternation every driver uses keeps the
-cache exact.  (Contract: at most one ``update`` between ``select``s.)
+The cache refresh runs at the top of any select with pending staleness
+(``state.stale_fill > 0``) — including coverage-sweep rounds — and
+covers the whole staled-id ring (``stale_slots`` cohorts' worth, one
+by default); refreshing an already-fresh row is idempotent, so both
+the strict select→update alternation of the sync drivers and the
+buffered-async server's skipped/merged updates keep the cache exact.
+(Contract: at most ``stale_slots``·K ids staled between ``select``s —
+the ring's capacity.)
 """
 from __future__ import annotations
 
@@ -42,7 +45,8 @@ from repro.core.selectors.base import ClientSelector
 from repro.core.selectors.functional import (FunctionalSelector,
                                              Observations, SelectorState,
                                              init_state, mark_seen,
-                                             stale_rows, take_key)
+                                             stale_append, stale_clear,
+                                             take_key)
 from repro.kernels import hics_selection_step, hics_selection_step_cached
 
 REQUIRES = frozenset({"bias_sel"})
@@ -54,7 +58,7 @@ def hics_functional(num_clients: int, num_select: int, total_rounds: int,
                     num_clusters: Optional[int] = None,
                     linkage: str = "ward", normalize: bool = False,
                     gram_in_bf16: bool = False, num_classes: int = 1,
-                    incremental: bool = True,
+                    incremental: bool = True, stale_slots: int = 1,
                     **_kw) -> FunctionalSelector:
     n = int(num_clients)
     k = min(int(num_select), n)
@@ -64,23 +68,34 @@ def hics_functional(num_clients: int, num_select: int, total_rounds: int,
     tr = float(total_rounds)
     num_classes = max(1, int(num_classes))
     incremental = bool(incremental)
+    stale_len = k * max(1, int(stale_slots))
 
     def init(key) -> SelectorState:
         return init_state(key, n, weights, num_classes=num_classes,
                           dist_cache=incremental,
-                          stale_len=k if incremental else 0)
+                          stale_len=stale_len if incremental else 0)
 
     def select(state: SelectorState, t, key=None):
         state, key = take_key(state, key)
 
         if incremental:
-            # K-row refresh of the cached distance/stats (idempotent on
-            # fresh rows) — the only Δb-dependent compute of the round
-            _, dist_c, stats_c = hics_selection_step_cached(
-                state.delta_b, state.dist_cache, state.row_stats,
-                state.stale_ids, temperature, lam=lam,
-                normalize=normalize, gram_in_bf16=gram_in_bf16)
-            state = state._replace(dist_cache=dist_c, row_stats=stats_c)
+            # ring refresh of the cached distance/stats (idempotent on
+            # fresh rows) — the only Δb-dependent compute of the
+            # round.  Skipped entirely when no update staled anything
+            # since the last refresh (async ticks without an
+            # aggregation, masked empty cohorts).
+            def _refresh(_):
+                _, d, s = hics_selection_step_cached(
+                    state.delta_b, state.dist_cache, state.row_stats,
+                    state.stale_ids, temperature, lam=lam,
+                    normalize=normalize, gram_in_bf16=gram_in_bf16)
+                return d, s
+
+            dist_c, stats_c = jax.lax.cond(
+                state.stale_fill > 0, _refresh,
+                lambda _: (state.dist_cache, state.row_stats), 0)
+            state = stale_clear(state._replace(
+                dist_cache=dist_c, row_stats=stats_c))
 
         def sweep(key):
             ids = coverage_sweep_device(key, state.seen, k)
@@ -119,7 +134,7 @@ def hics_functional(num_clients: int, num_select: int, total_rounds: int,
             delta_b=db, hist_count=state.hist_count + 1), ids)
         if incremental:
             # stale the replaced rows; the next select refreshes them
-            state = stale_rows(state, ids, k)
+            state = stale_append(state, ids)
         return state
 
     def entropies(state: SelectorState) -> jnp.ndarray:

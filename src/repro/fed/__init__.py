@@ -1,14 +1,23 @@
-"""Federated-learning runtime: partitioning, clients, server, simulation."""
+"""Federated-learning runtime: partitioning, clients, sync + buffered-
+async servers, simulation."""
+from repro.fed.async_server import (AsyncConfig, AsyncFederatedServer,
+                                    ticks_to_loss)
+from repro.fed.buffer import (RingBuffer, buffer_init, buffer_pop,
+                              buffer_push)
 from repro.fed.client import (ALGOS, OPTIMIZERS, LocalSpec, init_extra,
                               make_eval_fn, make_local_update)
+from repro.fed.latency import LatencySpec, delay_tables
 from repro.fed.partition import dirichlet_partition, multi_alpha_partition
 from repro.fed.server import FedConfig, FederatedServer, rounds_to_accuracy
 from repro.fed.simulation import (PAPER_SETTINGS, ExperimentSpec, build,
                                   run_experiment)
 
 __all__ = [
+    "AsyncConfig", "AsyncFederatedServer", "ticks_to_loss",
+    "RingBuffer", "buffer_init", "buffer_pop", "buffer_push",
     "ALGOS", "OPTIMIZERS", "LocalSpec", "init_extra", "make_eval_fn",
-    "make_local_update", "dirichlet_partition", "multi_alpha_partition",
+    "make_local_update", "LatencySpec", "delay_tables",
+    "dirichlet_partition", "multi_alpha_partition",
     "FedConfig", "FederatedServer", "rounds_to_accuracy",
     "PAPER_SETTINGS", "ExperimentSpec", "build", "run_experiment",
 ]

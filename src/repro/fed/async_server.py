@@ -1,0 +1,398 @@
+"""Buffered-async federated server: FedBuff-style aggregation with
+staleness-aware selection, as ONE jitted ``lax.scan`` over ticks.
+
+Sync FL (``repro.fed.server``) blocks each round on all K participants.
+Production fleets don't: contributions trickle in behind stragglers,
+bursts and dropouts.  This subsystem models that traffic shape without
+giving up the repo's everything-on-device discipline:
+
+Per tick t (one scan step, zero host transfers):
+
+  1. DISPATCH — ``select`` a cohort of K clients (same functional
+     ``(init, select, update)`` protocol as the sync drivers), run
+     their local updates against the CURRENT global params, and stamp
+     each contribution with the server ``version``.  The contribution
+     (local params pytree + Δb row) enters the in-flight pool with an
+     arrival tick ``t + delay`` drawn from the latency model's
+     precomputed delay tables (``repro.fed.latency``) — arrival order
+     is data, so the scan never re-jits.
+  2. ARRIVALS — pool entries whose arrival tick is t are pushed,
+     oldest-dispatch-first, into the fixed-capacity ring buffer
+     (``repro.fed.buffer``).  Overflow is dropped AND counted.
+  3. AGGREGATE — when ``fill >= threshold`` fires, the M oldest
+     entries pop (FIFO) and fold into the global params by
+     staleness-weighted averaging: ``age = version_now − version_at_
+     dispatch``, weight ``w = 1/(1+age)^beta`` (FedBuff/FedAsync;
+     ``beta=0`` recovers the plain mean, ``server_mix`` optionally
+     anchors to the previous global params).  The selector's
+     ``update`` then consumes the popped cohort — duplicate client
+     ids across buffered cohorts are resolved NEWEST-WINS before the
+     scatter so the write is deterministic — and the staled-id ring
+     (``stale_slots`` cohorts wide, see ``core/selectors/functional``)
+     records up to M rows for the next ``select``'s cache refresh.
+
+Parity oracle (tests/test_async_server.py): with the identity latency
+model, ``capacity = threshold = K``, every tick fires with all ages 0,
+so weights are exactly 1.0 and ``aggregate_params`` reduces
+bit-identically to the sync mean — the async scan reproduces the sync
+scanned loop's participant sets, key chain and parameters BIT-EXACTLY.
+That is why aggregation routes through the one shared
+:func:`repro.fed.server.aggregate_params` definition.
+
+Age is counted dispatch→application (not dispatch→arrival): a
+contribution keeps aging while queued, which is the bound the buffer's
+FIFO pop keeps tight.
+
+``full_all`` selectors (DivFL's ideal all-clients gradient poll) are
+rejected: an every-tick N-client poll has no async semantics — the
+poll would itself be stale.  ``bias_sel`` / ``full_sel`` / ``loss_all``
+all ride the tick loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (SELECTORS, Observations, head_bias_updates_stacked,
+                        make_functional)
+from repro.core.hetero import head_num_classes
+from repro.fed.buffer import buffer_init, buffer_pop, buffer_push
+from repro.fed.client import (LocalSpec, init_extra, make_eval_fn,
+                              make_local_update)
+from repro.fed.latency import LatencySpec, delay_tables, max_delay
+from repro.fed.server import (_tree_stack_gather, _tree_stack_scatter,
+                              aggregate_params, full_sel_updates)
+
+#: requirement classes the async tick loop can satisfy on-device.
+_ASYNC_SCANNABLE = frozenset({"bias_sel", "loss_all", "full_sel"})
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    num_clients: int = 50
+    num_select: int = 5          # cohort size dispatched per tick
+    ticks: int = 100             # scan length (≈ sync "rounds")
+    selector: str = "hics"
+    selector_kw: Optional[Dict[str, Any]] = None
+    local: LocalSpec = dataclasses.field(default_factory=LocalSpec)
+    capacity: int = 0            # ring-buffer capacity B (0 → K)
+    threshold: int = 0           # aggregation fill threshold M (0 → K)
+    beta: float = 0.5            # staleness exponent in 1/(1+age)^beta
+    server_mix: float = 0.0      # θ ← (1−mix)·agg + mix·θ_prev
+    latency: LatencySpec = dataclasses.field(default_factory=LatencySpec)
+    max_lag: int = 16            # delay clip → in-flight window W−1
+    eval_every: int = 5
+    seed: int = 0
+    lr_decay_every: int = 10
+    lr_decay: float = 0.5
+
+    def sizes(self):
+        """Resolved (K, B, M) with the 0 → K defaults applied."""
+        k = int(self.num_select)
+        b = int(self.capacity) or k
+        m = int(self.threshold) or k
+        if m < 1 or m > b:
+            raise ValueError(f"threshold must be in [1, capacity]: "
+                             f"M={m}, B={b}")
+        return k, b, m
+
+
+class InFlightPool(NamedTuple):
+    """Dispatched-but-not-arrived contributions: one row per tick in a
+    W-deep window (W = max delay + 1), K slots per row.  Tick t writes
+    row ``t mod W`` — safe because every earlier occupant of that row
+    arrived at least one tick ago (delays are clipped to W − 1)."""
+    payload: Any              # pytree, leaves (W, K, ...)
+    ids: jnp.ndarray          # (W, K) int32
+    version: jnp.ndarray      # (W, K) int32
+    arrive: jnp.ndarray       # (W, K) int32 — absolute arrival tick
+    live: jnp.ndarray         # (W, K) bool
+
+
+def _pool_init(window: int, k: int, payload_proto: Any) -> InFlightPool:
+    payload = jax.tree_util.tree_map(
+        lambda l: jnp.zeros((window, k) + jnp.shape(l),
+                            jnp.asarray(l).dtype), payload_proto)
+    return InFlightPool(
+        payload=payload,
+        ids=jnp.zeros((window, k), jnp.int32),
+        version=jnp.zeros((window, k), jnp.int32),
+        arrive=jnp.full((window, k), -1, jnp.int32),
+        live=jnp.zeros((window, k), bool))
+
+
+def make_tick_step(cfg: AsyncConfig, fn, local_update: Callable,
+                   eval_fn: Callable, get_batch: Callable,
+                   get_all: Callable, base_delay, window: int,
+                   select_ids: Optional[Callable] = None,
+                   has_extras: bool = False):
+    """Build the jitted async tick body, shared by the standalone
+    :class:`AsyncFederatedServer` and the vmapped async sweep runner.
+
+    get_batch(ids) -> (x (K, S, d), y, mask) for the cohort;
+    get_all()      -> (x (N, S, d), y, mask) for loss_all polling;
+    select_ids(sstate, t, kr, k_sel) -> (ids, sstate) overrides plain
+    ``fn.select`` (the sweep runner plugs availability masking in).
+
+    Returns ``(tick_step, init_runtime)`` where ``init_runtime(params)
+    -> (pool, buffer)`` allocates the carry's runtime structures.
+    """
+    k, b, m = cfg.sizes()
+    w = int(window)
+    beta, mix = float(cfg.beta), float(cfg.server_mix)
+    need_losses = "loss_all" in fn.requires
+    need_full_sel = "full_sel" in fn.requires
+    unmet = fn.requires - _ASYNC_SCANNABLE
+    if unmet:
+        raise ValueError(
+            f"async server unsupported for selector {fn.name!r} (needs "
+            f"{sorted(unmet)}; an every-tick all-clients poll has no "
+            "async semantics)")
+    lu_v = jax.vmap(local_update, in_axes=(None, 0, 0, 0, 0, 0, None))
+    eval_v = jax.vmap(lambda p, cx, cy, cm: eval_fn(p, cx, cy, cm),
+                      in_axes=(None, 0, 0, 0))
+    if select_ids is None:
+        select_ids = lambda sstate, t, kr, k_sel: fn.select(
+            sstate, t, k_sel)
+    base_delay = jnp.asarray(base_delay, jnp.int32)
+    has_entropies = fn.entropies is not None
+
+    def init_runtime(params):
+        c = head_num_classes(params) or 1
+        proto = {"params": params,
+                 "delta_b": jnp.zeros((c,), jnp.float32)}
+        return _pool_init(w, k, proto), buffer_init(b, proto)
+
+    def tick_step(carry, xs):
+        params, extras, sstate, pool, buf, version = carry
+        t, kr, jit_row = xs
+        k_sel, k_loc = jax.random.split(kr)
+
+        # -- 1. dispatch --------------------------------------------------
+        ids, sstate = select_ids(sstate, t, kr, k_sel)
+        rngs = jax.random.split(k_loc, k)
+        decay = jnp.float32(cfg.lr_decay) ** (t // cfg.lr_decay_every)
+        cx, cy, cm = get_batch(ids)
+        ex_sel = (_tree_stack_gather(extras, ids) if has_extras else {})
+        new_params, new_extras, metrics = lu_v(
+            params, ex_sel, cx, cy, cm, rngs, decay)
+        if has_extras:
+            # client-local algorithm state (feddyn h, moon prev) updates
+            # when the CLIENT trains — dispatch time — not at arrival
+            extras = _tree_stack_scatter(extras, ids, new_extras)
+        db = head_bias_updates_stacked(params, new_params)     # (K, C)
+        delay = jnp.clip(base_delay[ids] + jit_row, 0, w - 1)
+        row = jnp.mod(t, w)
+        entry = {"params": new_params, "delta_b": db}
+        pool = pool._replace(
+            payload=jax.tree_util.tree_map(
+                lambda dst, src: dst.at[row].set(src),
+                pool.payload, entry),
+            ids=pool.ids.at[row].set(ids.astype(jnp.int32)),
+            version=pool.version.at[row].set(
+                jnp.full((k,), version, jnp.int32)),
+            arrive=pool.arrive.at[row].set((t + delay).astype(jnp.int32)),
+            live=pool.live.at[row].set(True))
+
+        # -- 2. arrivals --------------------------------------------------
+        # pool rows reordered oldest-dispatch-first so the buffer's FIFO
+        # order is dispatch order
+        order = jnp.mod(t + 1 + jnp.arange(w, dtype=jnp.int32), w)
+        arriving = pool.live & (pool.arrive == t)
+        flat = lambda l: l[order].reshape((w * k,) + l.shape[2:])
+        buf, accepted, dropped = buffer_push(
+            buf, flat(arriving),
+            jax.tree_util.tree_map(flat, pool.payload),
+            flat(pool.ids), flat(pool.version))
+        pool = pool._replace(live=pool.live & ~arriving)
+
+        # -- 3. aggregate -------------------------------------------------
+        fire = buf.fill >= m
+
+        def do_agg(args):
+            params, sstate, buf, version = args
+            popped, pids, pver, buf2 = buffer_pop(buf, m)
+            ages = (version - pver).astype(jnp.float32)
+            wts = jnp.power(1.0 + ages, -beta)
+            agg = aggregate_params(popped["params"], wts)
+            if mix > 0.0:
+                agg = jax.tree_util.tree_map(
+                    lambda a, p: (1.0 - mix) * a + mix * p, agg, params)
+            # duplicate client ids across buffered cohorts: resolve
+            # NEWEST-WINS so the selector's scatter writes one value
+            # per id deterministically (j keeps the row of the last
+            # occurrence of its id)
+            same = pids[None, :] == pids[:, None]            # (M, M)
+            win = jnp.argmax(
+                same * (jnp.arange(m, dtype=jnp.int32) + 1)[None, :],
+                axis=1)
+            losses = full_updates = None
+            if need_losses:
+                ax, ay, am = get_all()
+                losses, _ = eval_v(agg, ax, ay, am)
+            if need_full_sel:
+                full_updates = full_sel_updates(
+                    agg, popped["params"])[win]
+            sstate2 = fn.update(sstate, t, pids, Observations(
+                bias_updates=popped["delta_b"][win],
+                full_updates=full_updates, losses=losses))
+            return agg, sstate2, buf2, version + jnp.int32(1)
+
+        params, sstate, buf, version = jax.lax.cond(
+            fire, do_agg, lambda args: args,
+            (params, sstate, buf, version))
+
+        ent = (fn.entropies(sstate) if has_entropies
+               else jnp.zeros((0,), jnp.float32))
+        out = (ids, jnp.mean(metrics["train_loss"]), ent,
+               fire, buf.fill, accepted, dropped, version)
+        return (params, extras, sstate, pool, buf, version), out
+
+    return tick_step, init_runtime
+
+
+class AsyncFederatedServer:
+    """Drives T async ticks over padded client data — the buffered
+    counterpart of :class:`repro.fed.server.FederatedServer`, consuming
+    the IDENTICAL PRNG-key chain (one round key per tick, split into
+    selection/cohort keys) so the identity-latency configuration is the
+    sync scanned loop bit-for-bit."""
+
+    def __init__(self, init_fn, apply_fn, cfg: AsyncConfig,
+                 client_x: np.ndarray, client_y: np.ndarray,
+                 client_mask: np.ndarray,
+                 test: Optional[Dict[str, np.ndarray]] = None,
+                 features_fn=None):
+        assert client_x.shape[0] == cfg.num_clients
+        self.cfg = cfg
+        k, b, m = cfg.sizes()
+        self.x = jnp.asarray(client_x)
+        self.y = jnp.asarray(client_y)
+        self.mask = jnp.asarray(client_mask)
+        self.test = test
+        self.rng = jax.random.PRNGKey(cfg.seed)
+        self.rng, k0 = jax.random.split(self.rng)
+        self.params = init_fn(k0)
+        self.apply_fn = apply_fn
+
+        if cfg.selector not in SELECTORS:
+            raise KeyError(f"unknown selector {cfg.selector!r}; known: "
+                           f"{sorted(SELECTORS)}")
+        kw = dict(cfg.selector_kw or {})
+        requires = SELECTORS[cfg.selector].requires
+        if "bias_sel" in requires:
+            kw.setdefault("num_classes", head_num_classes(self.params) or 1)
+        if requires & {"full_all", "full_sel"}:
+            kw.setdefault("feat_dim", sum(
+                x.size for x in jax.tree_util.tree_leaves(self.params)))
+        # the staled-id ring must cover one aggregation's M ids
+        kw.setdefault("stale_slots", -(-m // k))
+        # weights p_k ∝ |B_k| through the shim's exact normalization
+        sizes = np.asarray(client_mask.sum(axis=1), np.float64)
+        weights = sizes / sizes.sum()
+        self.fn = make_functional(
+            cfg.selector, num_clients=cfg.num_clients, num_select=k,
+            total_rounds=cfg.ticks, weights=weights, **kw)
+        # selector-init key: the OO shim's chain (split of PRNGKey(seed))
+        _, k_sel0 = jax.random.split(jax.random.PRNGKey(cfg.seed))
+        self.state = self.fn.init(k_sel0)
+
+        self._lu = make_local_update(apply_fn, cfg.local, features_fn)
+        self._eval = make_eval_fn(apply_fn)
+        ex0 = init_extra(cfg.local, self.params)
+        self._extras = jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (cfg.num_clients,) + l.shape),
+            ex0) if ex0 else {}
+
+        base, jitter = delay_tables(cfg.latency, cfg.num_clients,
+                                    cfg.ticks, k)
+        self._window = max_delay(cfg.latency, base, jitter,
+                                 cfg.max_lag) + 1
+        self._jitter = jnp.asarray(
+            np.clip(jitter, 0, self._window - 1), jnp.int32)
+        self._tick_step, init_runtime = make_tick_step(
+            cfg, self.fn, self._lu, self._eval,
+            get_batch=lambda ids: (self.x[ids], self.y[ids],
+                                   self.mask[ids]),
+            get_all=lambda: (self.x, self.y, self.mask),
+            base_delay=base, window=self._window,
+            has_extras=bool(self._extras))
+        self._pool, self._buffer = init_runtime(self.params)
+        self._version = jnp.int32(0)
+        self._scan_jit = jax.jit(
+            lambda carry, xs: jax.lax.scan(self._tick_step, carry, xs))
+        self.history: Dict[str, list] = {
+            "round": [], "train_loss": [], "selected": [],
+            "fired": [], "buffer_fill": [], "accepted": [],
+            "dropped": [], "version": [], "bias_entropy": [],
+            "test_round": [], "test_loss": [], "test_acc": [],
+            "wall_s": [],
+        }
+
+    # ------------------------------------------------------------------
+    def run(self, progress: bool = False) -> Dict[str, list]:
+        cfg = self.cfg
+        carry = (self.params, self._extras, self.state, self._pool,
+                 self._buffer, self._version)
+        seg_len = cfg.eval_every if self.test is not None else cfg.ticks
+        t = 0
+        while t < cfg.ticks:
+            n = min(seg_len, cfg.ticks - t)
+            keys = []
+            for _ in range(n):      # the sync server's exact key chain
+                self.rng, kr = jax.random.split(self.rng)
+                keys.append(kr)
+            ts = jnp.arange(t, t + n, dtype=jnp.int32)
+            xs = (ts, jnp.stack(keys), self._jitter[t:t + n])
+            t_start = time.perf_counter()
+            carry, outs = self._scan_jit(carry, xs)
+            jax.block_until_ready(carry)
+            wall = (time.perf_counter() - t_start) / n
+            (ids_seg, loss_seg, ent_seg, fired_seg, fill_seg, acc_seg,
+             drop_seg, ver_seg) = [np.asarray(o) for o in outs]
+            for i in range(n):
+                self.history["round"].append(t + i)
+                self.history["train_loss"].append(float(loss_seg[i]))
+                self.history["selected"].append(ids_seg[i].tolist())
+                self.history["fired"].append(bool(fired_seg[i]))
+                self.history["buffer_fill"].append(int(fill_seg[i]))
+                self.history["accepted"].append(int(acc_seg[i]))
+                self.history["dropped"].append(int(drop_seg[i]))
+                self.history["version"].append(int(ver_seg[i]))
+                self.history["bias_entropy"].append(
+                    ent_seg[i].tolist() if ent_seg.shape[-1] else None)
+                self.history["wall_s"].append(wall)
+            t += n
+            (self.params, self._extras, self.state, self._pool,
+             self._buffer, self._version) = carry
+            if self.test is not None:
+                tl, ta = self._eval(self.params, self.test["x"],
+                                    self.test["y"], self.test["mask"])
+                self.history["test_round"].append(t - 1)
+                self.history["test_loss"].append(float(tl))
+                self.history["test_acc"].append(float(ta))
+                if progress:
+                    print(f"tick {t - 1:4d} "
+                          f"loss={self.history['train_loss'][-1]:.4f} "
+                          f"test_acc={float(ta):.4f}", flush=True)
+        self.history["aggregations"] = int(np.sum(self.history["fired"]))
+        self.history["dropped_total"] = int(np.sum(self.history["dropped"]))
+        self.history["mean_fill"] = float(np.mean(
+            self.history["buffer_fill"]))
+        return self.history
+
+
+def ticks_to_loss(history: Dict[str, list], target: float
+                  ) -> Optional[int]:
+    """First tick at which train loss dipped to ``target`` — the
+    time-to-target metric ``BENCH_async.json`` compares sync vs async
+    under increasing straggler severity."""
+    for t, l in zip(history["round"], history["train_loss"]):
+        if l <= target:
+            return int(t)
+    return None

@@ -1,0 +1,112 @@
+"""Device-resident fixed-capacity ring buffer for buffered-async FL.
+
+The async server's aggregation queue: arrived client contributions
+(local params pytree + Δb row, tagged with client id and dispatch
+version) wait here until the fill threshold fires.  The buffer is a
+plain :class:`RingBuffer` pytree — every leaf a fixed-shape device
+array — so it rides a ``lax.scan`` carry untouched, and all three
+operations (init / push / pop) are pure shape-static functions.
+
+Invariants (asserted by tests/test_async_server.py):
+
+  * capacity B is static; ``fill`` ∈ [0, B]; the oldest entry lives at
+    ``head``, entry ``i``-th-oldest at ``(head + i) mod B``.
+  * ``push`` accepts masked candidate rows IN ROW ORDER (the caller
+    orders them oldest-dispatch-first), appends until full, and counts
+    the overflow it drops — arrivals are never silently lost, they are
+    *accounted* lost (``BENCH_async.json`` reports the drop rate).
+  * ``pop(m)`` removes exactly the ``m`` oldest entries (FIFO), so
+    staleness-weighted aggregation consumes contributions in arrival
+    order and a contribution's age is bounded by its queue time.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class RingBuffer(NamedTuple):
+    """Fixed-capacity FIFO of client contributions, as a pytree.
+
+    payload : pytree with (B, ...) leaves — the buffered data (local
+              params + Δb row for the async server; opaque here).
+    ids     : (B,) int32 — contributing client per slot.
+    version : (B,) int32 — server version at the entry's dispatch.
+    head    : ()  int32 — slot of the oldest entry.
+    fill    : ()  int32 — live entries.
+    """
+    payload: Any
+    ids: jnp.ndarray
+    version: jnp.ndarray
+    head: jnp.ndarray
+    fill: jnp.ndarray
+
+
+def buffer_init(capacity: int, payload_proto: Any) -> RingBuffer:
+    """An empty buffer whose payload leaves are ``(B,) + proto.shape``
+    zeros — ``payload_proto`` is ONE entry's pytree (e.g. a params
+    pytree plus a (C,) Δb row)."""
+    b = int(capacity)
+    if b < 1:
+        raise ValueError(f"ring buffer capacity must be >= 1, got {b}")
+    payload = jax.tree_util.tree_map(
+        lambda l: jnp.zeros((b,) + jnp.shape(l), jnp.asarray(l).dtype),
+        payload_proto)
+    return RingBuffer(payload=payload,
+                      ids=jnp.zeros(b, jnp.int32),
+                      version=jnp.zeros(b, jnp.int32),
+                      head=jnp.int32(0),
+                      fill=jnp.int32(0))
+
+
+def buffer_push(buf: RingBuffer, mask: jnp.ndarray, payload_rows: Any,
+                ids: jnp.ndarray, version: jnp.ndarray
+                ) -> Tuple[RingBuffer, jnp.ndarray, jnp.ndarray]:
+    """Append the masked candidate rows in row order; drop overflow.
+
+    mask         : (R,) bool — which candidate rows arrived this tick.
+    payload_rows : pytree with (R, ...) leaves, row-aligned with mask.
+    ids, version : (R,) int32.
+
+    Returns ``(buffer, accepted, dropped)`` — accepted + dropped =
+    mask.sum().  Rows are appended oldest-row-first, so the caller's
+    row ordering IS the FIFO ordering.  Overflow rows (buffer already
+    full) are dropped via out-of-range scatter indices with
+    ``mode="drop"`` — shape-static, no host branching."""
+    b = buf.ids.shape[0]
+    mask = mask.astype(bool)
+    seq = jnp.cumsum(mask.astype(jnp.int32)) - 1   # rank among arrivals
+    free = b - buf.fill
+    accept = mask & (seq < free)
+    # out-of-range sentinel (b) for rejected rows → dropped by scatter
+    slot = jnp.where(accept, (buf.head + buf.fill + seq) % b, b)
+    payload = jax.tree_util.tree_map(
+        lambda dst, src: dst.at[slot].set(src, mode="drop"),
+        buf.payload, payload_rows)
+    accepted = jnp.sum(accept.astype(jnp.int32))
+    dropped = jnp.sum(mask.astype(jnp.int32)) - accepted
+    buf = buf._replace(
+        payload=payload,
+        ids=buf.ids.at[slot].set(ids.astype(jnp.int32), mode="drop"),
+        version=buf.version.at[slot].set(version.astype(jnp.int32),
+                                         mode="drop"),
+        fill=buf.fill + accepted)
+    return buf, accepted, dropped
+
+
+def buffer_pop(buf: RingBuffer, m: int
+               ) -> Tuple[Any, jnp.ndarray, jnp.ndarray, RingBuffer]:
+    """Remove and return the ``m`` (static) oldest entries.
+
+    Returns ``(payload, ids, version, buffer)`` with payload leaves
+    ``(m, ...)`` in FIFO order.  The caller must guarantee
+    ``fill >= m`` (the async server's fire condition does)."""
+    m = int(m)
+    idx = (buf.head + jnp.arange(m, dtype=jnp.int32)) % buf.ids.shape[0]
+    payload = jax.tree_util.tree_map(lambda l: l[idx], buf.payload)
+    out_ids, out_ver = buf.ids[idx], buf.version[idx]
+    buf = buf._replace(head=(buf.head + m) % buf.ids.shape[0],
+                       fill=buf.fill - m)
+    return payload, out_ids, out_ver, buf

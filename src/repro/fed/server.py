@@ -93,6 +93,32 @@ def _flatten_params(tree) -> jnp.ndarray:
                             jax.tree_util.tree_leaves(tree)])
 
 
+def aggregate_params(new_params, weights=None):
+    """θ^{t+1} from the cohort's stacked local params (K, ...).
+
+    ``weights=None`` is the sync drivers' unbiased-sampling mean
+    (1/K) Σ θ_k.  With a (K,) ``weights`` vector the normalized
+    weighted mean Σ w_k θ_k / Σ w_k is computed as
+    ``mean(θ_k · w̃_k)`` with ``w̃ = w·K/Σw`` — the form the async
+    server's staleness weighting uses, because when every weight is
+    exactly equal (all ages 0 ⇒ w_k = 1.0) ``w̃ ≡ 1.0`` exactly and
+    the weighted program is bit-identical to the unweighted mean.
+    That identity is the parity oracle's contract: ``jnp.mean`` and
+    ``sum/denom`` lower differently under XLA for non-power-of-two K,
+    so ONE definition here is shared by the host loop, the scanned
+    round step, the sweep engine and the async server."""
+    if weights is None:
+        return jax.tree_util.tree_map(
+            lambda stacked: jnp.mean(stacked, axis=0), new_params)
+    w = jnp.asarray(weights, jnp.float32)
+    scale = w * (w.shape[0] / jnp.sum(w))
+    return jax.tree_util.tree_map(
+        lambda stacked: jnp.mean(
+            stacked * scale.reshape((stacked.shape[0],)
+                                    + (1,) * (stacked.ndim - 1)),
+            axis=0), new_params)
+
+
 def full_sel_updates(params, new_params) -> jnp.ndarray:
     """The ``full_sel`` observation: participants' flattened
     θ_k − θ^{t+1} against the aggregated global params, (K, P).  ONE
@@ -227,8 +253,7 @@ class FederatedServer:
             bias_updates = head_bias_updates_stacked(self.params,
                                                      new_params)
             # aggregate: θ^{t+1} = (1/K) Σ θ_k
-            self.params = jax.tree_util.tree_map(
-                lambda stacked: jnp.mean(stacked, axis=0), new_params)
+            self.params = aggregate_params(new_params)
 
             losses = full_updates = None
             if "loss_all" in self.selector.requires:
@@ -293,8 +318,7 @@ class FederatedServer:
             if has_extras:
                 extras = _tree_stack_scatter(extras, ids, new_extras)
             bias_updates = head_bias_updates_stacked(params, new_params)
-            params = jax.tree_util.tree_map(
-                lambda stacked: jnp.mean(stacked, axis=0), new_params)
+            params = aggregate_params(new_params)
             losses = full_updates = None
             if need_losses:
                 losses, _ = self._eval_vmapped(params, self.x, self.y,

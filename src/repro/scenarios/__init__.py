@@ -31,6 +31,9 @@ Scenario registry → paper map:
   flaky_severe       severe skew + 30% per-round dropout, availability
                      fed into select as a mask (Fu arXiv:2211.01549 §V)
   diurnal_mixed      setting (1) under staggered duty-cycle windows
+  stragglers_severe  severe skew + a 30% straggler cohort (async server)
+  diurnal_heavy_tail setting (1), diurnal windows + lognormal latency
+  flash_crowd        setting (1) with periodic burst arrivals
   =================  =====================================================
 
 Modules: ``partition_jax`` (pure-JAX key-derived partitioner),
@@ -46,9 +49,10 @@ from repro.scenarios.partition_jax import (Partition, pack_assignment,
 from repro.scenarios.registry import (SCENARIOS, Scenario, get_scenario,
                                       make_dataset, materialize,
                                       scenario_key)
-from repro.scenarios.sweep import (SweepSpec, bench_sweep, build_pair,
-                                   run_host_reference, run_sweep,
-                                   seed_keychain)
+from repro.scenarios.sweep import (SweepSpec, bench_sweep,
+                                   build_async_pair, build_pair,
+                                   run_async_sweep, run_host_reference,
+                                   run_sweep, seed_keychain)
 
 __all__ = [
     "availability_mask", "masked_select", "replace_unavailable",
@@ -56,6 +60,7 @@ __all__ = [
     "partition_label_distributions",
     "SCENARIOS", "Scenario", "get_scenario", "make_dataset",
     "materialize", "scenario_key",
-    "SweepSpec", "bench_sweep", "build_pair", "run_host_reference",
-    "run_sweep", "seed_keychain",
+    "SweepSpec", "bench_sweep", "build_async_pair", "build_pair",
+    "run_async_sweep", "run_host_reference", "run_sweep",
+    "seed_keychain",
 ]

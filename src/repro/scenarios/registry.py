@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data import SyntheticSpec, make_train_test
+from repro.fed.latency import LatencySpec
 from repro.scenarios.partition_jax import Partition, partition_device
 
 
@@ -39,6 +40,9 @@ class Scenario:
     avail_p: float = 0.0          # dropout prob / blocks off-duty fraction
     avail_period: int = 4         # blocks cycle length (rounds)
     data: SyntheticSpec = dataclasses.field(default_factory=SyntheticSpec)
+    #: arrival-latency model for the buffered-async server (sync
+    #: drivers ignore it; identity = async degenerates to sync)
+    latency: LatencySpec = dataclasses.field(default_factory=LatencySpec)
     paper: str = ""               # paper section this regime instantiates
 
     def partition(self, key: jax.Array, labels: jnp.ndarray,
@@ -84,6 +88,22 @@ SCENARIOS: Dict[str, Scenario] = {s.name: s for s in (
              availability="blocks", avail_p=0.25, avail_period=4,
              paper="beyond the paper: setting (1) with staggered "
                    "diurnal availability windows"),
+    # --- async traffic-shape family (repro.fed.async_server) ----------
+    Scenario("stragglers_severe", kind="dirichlet", alphas=(0.01,),
+             latency=LatencySpec(kind="stragglers", straggler_frac=0.3,
+                                 straggler_delay=6),
+             paper="beyond the paper: severe skew + a 30% straggler "
+                   "cohort 6 ticks slow (FedBuff-style system "
+                   "heterogeneity; Fu arXiv:2211.01549 §IV)"),
+    Scenario("diurnal_heavy_tail", kind="multi_alpha", alphas=SETTING1,
+             availability="blocks", avail_p=0.25, avail_period=4,
+             latency=LatencySpec(kind="lognormal", mu=0.3, scale=0.9),
+             paper="beyond the paper: setting (1), diurnal windows + "
+                   "heavy-tail lognormal arrival latency"),
+    Scenario("flash_crowd", kind="multi_alpha", alphas=SETTING1,
+             latency=LatencySpec(kind="flash_crowd", period=6),
+             paper="beyond the paper: setting (1) with periodic burst "
+                   "arrivals — the ring buffer's overflow stress test"),
 )}
 
 

@@ -43,10 +43,17 @@ from repro.configs import get_config
 from repro.core import (SELECTORS, Observations, head_bias_updates_stacked,
                         head_num_classes, make_functional)
 from repro.data import SyntheticSpec
-from repro.fed.client import LocalSpec, make_eval_fn, make_local_update
+from repro.fed.async_server import (_ASYNC_SCANNABLE, AsyncConfig,
+                                    make_tick_step)
+from repro.fed.client import (LocalSpec, init_extra, make_eval_fn,
+                              make_local_update)
+from repro.fed.latency import delay_tables, max_delay
 from repro.fed.server import (_SCANNABLE, FedConfig, FederatedServer,
-                              full_sel_updates, make_grad_all)
-from repro.models.classifier import make_classifier
+                              _tree_stack_gather, _tree_stack_scatter,
+                              aggregate_params, full_sel_updates,
+                              make_grad_all)
+from repro.models.classifier import (make_classifier,
+                                     make_classifier_with_features)
 from repro.scenarios.availability import availability_mask, masked_select
 from repro.scenarios.partition_jax import Partition
 from repro.scenarios.registry import (Scenario, get_scenario, make_dataset,
@@ -122,6 +129,16 @@ def _normalized_weights(mask_np: np.ndarray) -> jnp.ndarray:
     return wd / jnp.sum(wd)
 
 
+def _make_model(spec: SweepSpec, cfg, input_dim: int):
+    """(init, apply, features) for the sweep's model — the server
+    builder's exact moon special-case (the contrastive term needs the
+    embedding head), so both drivers train identical models."""
+    if spec.local.algo == "moon":
+        return make_classifier_with_features(cfg, input_dim=input_dim)
+    init_fn, apply_fn, _ = make_classifier(cfg, input_dim=input_dim)
+    return init_fn, apply_fn, None
+
+
 def _probe_requires(spec: SweepSpec, name: str) -> frozenset:
     """A selector's effective requirements (factory kwargs can move it
     between classes, e.g. divfl's ``refresh="selected"``), probed from
@@ -154,18 +171,23 @@ def _make_selector_fn(spec: SweepSpec, name: str, num_classes: int,
 
 
 def make_seed_runner(spec: SweepSpec, scenario: Scenario, fn, apply_fn,
-                     x: jnp.ndarray, y: jnp.ndarray, test: dict):
+                     x: jnp.ndarray, y: jnp.ndarray, test: dict,
+                     features_fn=None):
     """Build ``run_seed(params0, sstate0, partition, round_keys)`` — the
     whole T-round experiment for ONE seed as a pure jit/vmap-compatible
     function.  The round body mirrors ``FederatedServer._make_round_step``
-    so participant sets match the server loop key-for-key."""
+    so participant sets match the server loop key-for-key.
+
+    Stateful local algorithms (feddyn's per-client h, moon's previous
+    local params) are supported: the (N, ...) extras pytree is built
+    from the seed's own ``params0`` inside ``run_seed`` — pure tree
+    ops, so it batches over the vmapped seed axis like every other
+    carry leaf — and gathered/scattered by participant ids each round
+    exactly as the server loop does.  ``features_fn`` must be supplied
+    for moon (the contrastive term embeds through it)."""
     cfg_n, cfg_k = spec.num_clients, spec.num_select
-    if spec.local.algo in ("feddyn", "moon"):
-        raise ValueError(
-            f"sweep engine supports stateless local algorithms; "
-            f"{spec.local.algo!r} carries per-client extras — use the "
-            f"server loop")
-    lu = make_local_update(apply_fn, spec.local)
+    has_extras = spec.local.algo in ("feddyn", "moon")
+    lu = make_local_update(apply_fn, spec.local, features_fn)
     lu_v = jax.vmap(lu, in_axes=(None, 0, 0, 0, 0, 0, None))
     eval_fn = make_eval_fn(apply_fn)
     eval_v = jax.vmap(lambda p, cx, cy, cm: eval_fn(p, cx, cy, cm),
@@ -182,9 +204,13 @@ def make_seed_runner(spec: SweepSpec, scenario: Scenario, fn, apply_fn,
 
     def run_seed(params0, sstate0, part: Partition, round_keys):
         idx, mask = part.idx, part.mask
+        ex0 = init_extra(spec.local, params0) if has_extras else None
+        extras0 = (jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (cfg_n,) + l.shape), ex0)
+            if ex0 else {})
 
         def round_step(carry, xs):
-            params, sstate = carry
+            params, extras, sstate = carry
             if need_full_all:          # round_keys rows are (kr, kg)
                 t, key_pair = xs
                 kr, kg = key_pair[0], key_pair[1]
@@ -201,11 +227,15 @@ def make_seed_runner(spec: SweepSpec, scenario: Scenario, fn, apply_fn,
             rngs = jax.random.split(k_loc, cfg_k)
             decay = jnp.float32(spec.lr_decay) ** (t // spec.lr_decay_every)
             sel_idx = idx[ids]                              # (K, cap)
-            new_params, _, metrics = lu_v(
-                params, {}, x[sel_idx], y[sel_idx], mask[ids], rngs, decay)
+            ex_sel = (_tree_stack_gather(extras, ids) if has_extras
+                      else {})
+            new_params, new_extras, metrics = lu_v(
+                params, ex_sel, x[sel_idx], y[sel_idx], mask[ids], rngs,
+                decay)
+            if has_extras:
+                extras = _tree_stack_scatter(extras, ids, new_extras)
             bias_updates = head_bias_updates_stacked(params, new_params)
-            params = jax.tree_util.tree_map(
-                lambda stacked: jnp.mean(stacked, axis=0), new_params)
+            params = aggregate_params(new_params)
             losses = full_updates = None
             if need_losses:
                 losses, _ = eval_v(params, x[idx], y[idx], mask)
@@ -220,12 +250,12 @@ def make_seed_runner(spec: SweepSpec, scenario: Scenario, fn, apply_fn,
             ent = (jnp.mean(fn.entropies(sstate)) if has_entropies
                    else jnp.float32(0.0))
             _, acc = eval_fn(params, test["x"], test["y"], test["mask"])
-            return (params, sstate), (ids, jnp.mean(metrics["train_loss"]),
-                                      ent, acc)
+            return (params, extras, sstate), (
+                ids, jnp.mean(metrics["train_loss"]), ent, acc)
 
         ts = jnp.arange(spec.rounds, dtype=jnp.int32)
-        (params, sstate), (ids, loss, ent, acc) = jax.lax.scan(
-            round_step, (params0, sstate0), (ts, round_keys))
+        (params, extras, sstate), (ids, loss, ent, acc) = jax.lax.scan(
+            round_step, (params0, extras0, sstate0), (ts, round_keys))
         return {"selected": ids, "train_loss": loss, "mean_entropy": ent,
                 "test_acc": acc}
 
@@ -267,7 +297,7 @@ def build_pair(spec: SweepSpec, scenario_name: str,
     train, test, _ = make_dataset(scn, spec.samples_train,
                                   spec.samples_test, num_classes,
                                   spec.data_seed)
-    init_fn, apply_fn, _ = make_classifier(cfg, input_dim=scn.data.dim)
+    init_fn, apply_fn, features = _make_model(spec, cfg, scn.data.dim)
 
     need_gk = "full_all" in _probe_requires(spec, selector)
     chains = [seed_keychain(s, spec.rounds, grad_keys=need_gk)
@@ -300,7 +330,7 @@ def build_pair(spec: SweepSpec, scenario_name: str,
     overflow = float(1.0 - kept / max(1, counts.sum()))
 
     run_seed = make_seed_runner(spec, scn, fn, apply_fn, train["x"],
-                                train["y"], test)
+                                train["y"], test, features_fn=features)
     return PairRun(scn, selector, run_seed, params0, sstate0, parts,
                    round_keys, overflow)
 
@@ -360,7 +390,7 @@ def run_host_reference(spec: SweepSpec, scenario_name: str, selector: str,
                                   spec.data_seed)
     part = materialize(scn, seed, train, num_classes, spec.num_clients,
                        cap)
-    init_fn, apply_fn, _ = make_classifier(cfg, input_dim=scn.data.dim)
+    init_fn, apply_fn, features = _make_model(spec, cfg, scn.data.dim)
     fed_cfg = FedConfig(
         num_clients=spec.num_clients, num_select=spec.num_select,
         rounds=spec.rounds, selector=selector,
@@ -370,8 +400,184 @@ def run_host_reference(spec: SweepSpec, scenario_name: str, selector: str,
         jit_rounds=jit_rounds)
     server = FederatedServer.from_partition(
         init_fn, apply_fn, fed_cfg, train["x"], train["y"], part,
-        test={k: np.asarray(v) for k, v in test.items()})
+        test={k: np.asarray(v) for k, v in test.items()},
+        features_fn=features)
     return server.run()
+
+
+def make_async_seed_runner(spec: SweepSpec, scenario: Scenario, fn,
+                           apply_fn, acfg: AsyncConfig, x: jnp.ndarray,
+                           y: jnp.ndarray, test: dict, features_fn=None):
+    """Async counterpart of :func:`make_seed_runner`: the whole T-tick
+    buffered-async experiment for ONE seed as a pure jit/vmap-compatible
+    function, built on the server's own ``make_tick_step`` body so the
+    standalone :class:`~repro.fed.async_server.AsyncFederatedServer`
+    and the vmapped sweep can't drift apart.  The in-flight pool and
+    ring buffer are ordinary carry pytrees, so they batch over the
+    vmapped seed axis like the selector cache does.
+
+    Latency tables are host-side numpy shared across seeds (the traffic
+    shape is part of the scenario, like the dataset); the partition —
+    and hence which client sits behind each delay — still varies per
+    seed."""
+    cfg_n = spec.num_clients
+    k, _, _ = acfg.sizes()
+    base, jitter = delay_tables(scenario.latency, cfg_n, acfg.ticks, k)
+    window = max_delay(scenario.latency, base, jitter, acfg.max_lag) + 1
+    jitter_dev = jnp.asarray(np.clip(jitter, 0, window - 1), jnp.int32)
+    has_extras = spec.local.algo in ("feddyn", "moon")
+    lu = make_local_update(apply_fn, spec.local, features_fn)
+    eval_fn = make_eval_fn(apply_fn)
+    time_varying = scenario.time_varying
+    has_entropies = fn.entropies is not None
+
+    def run_seed(params0, sstate0, part: Partition, round_keys):
+        idx, mask = part.idx, part.mask
+        get_batch = lambda ids: (x[idx[ids]], y[idx[ids]], mask[ids])
+        get_all = lambda: (x[idx], y[idx], mask)
+        select_fn = None
+        if time_varying:
+            def select_fn(sstate, t, kr, k_sel):
+                avail = availability_mask(scenario, cfg_n, t,
+                                          jax.random.fold_in(kr, 1))
+                return masked_select(fn, sstate, t, k_sel, avail,
+                                     jax.random.fold_in(kr, 2))
+        tick_step, init_runtime = make_tick_step(
+            acfg, fn, lu, eval_fn, get_batch, get_all, base, window,
+            select_ids=select_fn, has_extras=has_extras)
+        pool0, buf0 = init_runtime(params0)
+        ex0 = init_extra(spec.local, params0) if has_extras else None
+        extras0 = (jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (cfg_n,) + l.shape), ex0)
+            if ex0 else {})
+        ts = jnp.arange(acfg.ticks, dtype=jnp.int32)
+        carry0 = (params0, extras0, sstate0, pool0, buf0, jnp.int32(0))
+        carry, (ids, loss, ent, fired, fill, acc_c, drop, ver) = \
+            jax.lax.scan(tick_step, carry0, (ts, round_keys, jitter_dev))
+        params = carry[0]
+        _, final_acc = eval_fn(params, test["x"], test["y"],
+                               test["mask"])
+        mean_ent = (jnp.mean(ent, axis=1) if has_entropies
+                    else jnp.zeros_like(loss))
+        return {"selected": ids, "train_loss": loss,
+                "mean_entropy": mean_ent, "fired": fired,
+                "buffer_fill": fill, "accepted": acc_c, "dropped": drop,
+                "version": ver, "final_acc": final_acc}
+
+    return run_seed
+
+
+def build_async_pair(spec: SweepSpec, scenario_name: str, selector: str,
+                     capacity: int = 0, threshold: int = 0,
+                     beta: float = 0.5, server_mix: float = 0.0,
+                     max_lag: int = 16) -> Tuple[PairRun, AsyncConfig]:
+    """Materialize one async grid cell.  Same dataset / partition /
+    params / key chains as :func:`build_pair` (so identity latency with
+    ``capacity = threshold = K`` is the sync cell bit-for-bit), but the
+    runner drives the buffered-async tick loop and the selector gets a
+    staled-id ring wide enough for one aggregation's M ids."""
+    unmet = _probe_requires(spec, selector) - _ASYNC_SCANNABLE
+    if unmet:
+        raise ValueError(
+            f"async sweep unsupported for selector {selector!r} (needs "
+            f"{sorted(unmet)}; an every-tick all-clients poll has no "
+            "async semantics)")
+    k = spec.num_select
+    m = (int(threshold) or k)
+    kw = dict(spec.selector_kw or {})
+    kw.setdefault("stale_slots", -(-m // k))
+    spec = dataclasses.replace(spec, selector_kw=kw)
+    scn = spec.scenario(scenario_name)
+    acfg = AsyncConfig(
+        num_clients=spec.num_clients, num_select=k, ticks=spec.rounds,
+        selector=selector, selector_kw=kw, local=spec.local,
+        capacity=capacity, threshold=threshold, beta=beta,
+        server_mix=server_mix, latency=scn.latency, max_lag=max_lag,
+        lr_decay_every=spec.lr_decay_every, lr_decay=spec.lr_decay)
+    cfg = get_config(spec.arch)
+    num_classes = cfg.vocab_size
+    cap = spec.capacity()
+    train, test, _ = make_dataset(scn, spec.samples_train,
+                                  spec.samples_test, num_classes,
+                                  spec.data_seed)
+    init_fn, apply_fn, features = _make_model(spec, cfg, scn.data.dim)
+
+    chains = [seed_keychain(s, spec.rounds) for s in spec.seeds]
+    k_inits = jnp.stack([c[0] for c in chains])
+    k_sels = jnp.stack([c[1] for c in chains])
+    round_keys = jnp.stack([c[2] for c in chains])
+
+    part_keys = jnp.stack([scenario_key(scn, int(s)) for s in spec.seeds])
+    parts = jax.vmap(lambda key: scn.partition(
+        key, train["y"], num_classes, spec.num_clients, cap))(part_keys)
+
+    params0 = jax.vmap(init_fn)(k_inits)
+    params_one = jax.tree_util.tree_map(lambda l: l[0], params0)
+    fn = _make_selector_fn(spec, selector,
+                           head_num_classes(params_one) or 1,
+                           sum(x.size for x in
+                               jax.tree_util.tree_leaves(params_one)))
+    sstate0 = jax.vmap(fn.init)(k_sels)
+    weights = jnp.stack([_normalized_weights(np.asarray(parts.mask[i]))
+                         for i in range(len(spec.seeds))])
+    sstate0 = sstate0._replace(weights=weights)
+
+    counts = np.asarray(parts.counts, np.int64)
+    kept = np.asarray(parts.mask).sum()
+    overflow = float(1.0 - kept / max(1, counts.sum()))
+
+    run_seed = make_async_seed_runner(spec, scn, fn, apply_fn, acfg,
+                                      train["x"], train["y"], test,
+                                      features_fn=features)
+    return PairRun(scn, selector, run_seed, params0, sstate0, parts,
+                   round_keys, overflow), acfg
+
+
+def run_async_sweep(spec: SweepSpec, capacity: int = 0,
+                    threshold: int = 0, beta: float = 0.5,
+                    server_mix: float = 0.0, max_lag: int = 16,
+                    progress: bool = False) -> Dict[str, Any]:
+    """The async grid, seeds vmapped: each cell's latency model comes
+    from its scenario, so a grid over the async traffic-shape family
+    (``stragglers_severe``, ``diurnal_heavy_tail``, ``flash_crowd``)
+    compares selectors under increasing system heterogeneity."""
+    grid: Dict[str, Any] = {}
+    for scenario_name in spec.scenarios:
+        for selector in spec.selectors:
+            pair, acfg = build_async_pair(
+                spec, scenario_name, selector, capacity=capacity,
+                threshold=threshold, beta=beta, server_mix=server_mix,
+                max_lag=max_lag)
+            out = pair.vmapped()(pair.params0, pair.sstate0, pair.parts,
+                                 pair.round_keys)
+            out = jax.tree_util.tree_map(np.asarray, out)
+            acc = out["final_acc"]
+            cell = {
+                "seeds": [int(s) for s in spec.seeds],
+                "selected": out["selected"],           # (S, T, K)
+                "train_loss": out["train_loss"],       # (S, T)
+                "train_loss_mean": out["train_loss"].mean(axis=0).tolist(),
+                "mean_entropy": out["mean_entropy"],
+                "final_acc": acc.tolist(),
+                "final_acc_mean": float(acc.mean()),
+                "final_acc_std": float(acc.std()),
+                "aggregations": out["fired"].sum(axis=1).tolist(),
+                "dropped_total": out["dropped"].sum(axis=1).tolist(),
+                "mean_fill": out["buffer_fill"].mean(axis=1).tolist(),
+                "final_version": out["version"][:, -1].tolist(),
+                "overflow_frac": pair.overflow_frac,
+            }
+            grid[f"{scenario_name}/{selector}"] = cell
+            if progress:
+                print(f"  {scenario_name:18s} {selector:8s} "
+                      f"acc={cell['final_acc_mean']:.3f}"
+                      f"±{cell['final_acc_std']:.3f} "
+                      f"aggs={cell['aggregations']}", flush=True)
+    return {"spec": _spec_dict(spec),
+            "async": {"capacity": capacity, "threshold": threshold,
+                      "beta": beta, "server_mix": server_mix,
+                      "max_lag": max_lag},
+            "grid": grid}
 
 
 def bench_sweep(spec: SweepSpec, include_host: bool = False

@@ -44,6 +44,22 @@ except ModuleNotFoundError:  # ... and skip cleanly when it is absent.
     sys.modules["hypothesis.strategies"] = _st
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _bounded_jax_caches():
+    """Drop JAX's compiled-program caches when each module finishes.
+
+    Every module compiles its own jit/scan/vmap programs; letting all
+    of them stay live across the whole suite has crashed XLA:CPU's
+    compiler late in the run (segfault inside ``backend_compile``).
+    Module-internal caching — including the single-compile assertions —
+    is unaffected; cross-module reuse just recompiles.
+    """
+    yield
+    import jax
+
+    jax.clear_caches()
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

@@ -1,0 +1,399 @@
+"""Buffered-async server acceptance.
+
+The parity oracle: with the identity latency model and capacity =
+threshold = K, every tick fires with all ages 0, so the async scan must
+reproduce the sync loop BIT-EXACTLY — participant sets, key chain and
+parameters — for ≥ 2 selectors (hics + a full-update one) across the
+host, scanned-server and vmapped-sweep drivers.  Plus: ring-buffer
+invariants (FIFO, counted overflow), latency-table determinism,
+staleness-ring cache refresh vs from-scratch recompute under
+out-of-order / duplicate / empty cohorts, and ``masked_select`` with
+zero available clients.
+"""
+import dataclasses
+import functools
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import Observations, make_functional
+from repro.core.selectors.functional import stale_append
+from repro.data import SyntheticSpec
+from repro.fed import (AsyncConfig, AsyncFederatedServer, LatencySpec,
+                       LocalSpec, buffer_init, buffer_pop, buffer_push,
+                       delay_tables)
+from repro.fed.latency import KINDS, max_delay
+from repro.kernels import hics_selection_step_cached
+from repro.scenarios import (SweepSpec, build_async_pair, build_pair,
+                             get_scenario, make_dataset, masked_select,
+                             materialize, run_async_sweep,
+                             run_host_reference)
+from repro.scenarios.registry import SCENARIOS
+from repro.scenarios.sweep import _make_model
+
+SPEC = SweepSpec(
+    scenarios=("dir_mild",), selectors=("hics",), seeds=(0, 1),
+    num_clients=8, num_select=2, rounds=6,
+    samples_train=160, samples_test=64,
+    data=SyntheticSpec(dim=16, rank=2, noise=0.5),
+    local=LocalSpec(algo="fedavg", optimizer="sgd", lr=0.1, epochs=1,
+                    batch_size=32))
+
+_PROTO = {"v": jnp.zeros((), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# ring buffer invariants
+# ---------------------------------------------------------------------------
+
+
+def test_buffer_push_pop_fifo():
+    buf = buffer_init(3, _PROTO)
+    rows = {"v": jnp.asarray([10.0, 20.0, 30.0, 40.0])}
+    mask = jnp.asarray([True, False, True, True])
+    ids = jnp.arange(4, dtype=jnp.int32)
+    ver = jnp.asarray([5, 6, 7, 8], jnp.int32)
+    buf, acc, drop = buffer_push(buf, mask, rows, ids, ver)
+    assert (int(acc), int(drop), int(buf.fill)) == (3, 0, 3)
+    payload, pids, pver, buf = buffer_pop(buf, 2)
+    np.testing.assert_array_equal(payload["v"], [10.0, 30.0])
+    np.testing.assert_array_equal(pids, [0, 2])
+    np.testing.assert_array_equal(pver, [5, 7])
+    assert int(buf.fill) == 1 and int(buf.head) == 2
+
+
+def test_buffer_overflow_counted_not_silent():
+    buf = buffer_init(2, _PROTO)
+    rows = {"v": jnp.asarray([1.0, 2.0, 3.0, 4.0])}
+    mask = jnp.ones(4, bool)
+    buf, acc, drop = buffer_push(buf, mask, rows,
+                                 jnp.arange(4, dtype=jnp.int32),
+                                 jnp.zeros(4, jnp.int32))
+    assert (int(acc), int(drop)) == (2, 2)       # accepted + dropped = 4
+    payload, _, _, buf = buffer_pop(buf, 2)
+    np.testing.assert_array_equal(payload["v"], [1.0, 2.0])  # oldest kept
+    assert int(buf.fill) == 0
+
+
+def test_buffer_wraparound():
+    buf = buffer_init(3, _PROTO)
+    push = lambda b, vals: buffer_push(
+        b, jnp.ones(len(vals), bool),
+        {"v": jnp.asarray(vals, jnp.float32)},
+        jnp.zeros(len(vals), jnp.int32), jnp.zeros(len(vals), jnp.int32))
+    buf, _, _ = push(buf, [1.0, 2.0, 3.0])
+    _, _, _, buf = buffer_pop(buf, 2)                 # head wraps past 0
+    buf, acc, drop = push(buf, [4.0, 5.0])
+    assert (int(acc), int(drop), int(buf.fill)) == (2, 0, 3)
+    payload, _, _, buf = buffer_pop(buf, 3)
+    np.testing.assert_array_equal(payload["v"], [3.0, 4.0, 5.0])
+
+
+def test_buffer_init_validates_capacity():
+    with pytest.raises(ValueError, match="capacity"):
+        buffer_init(0, _PROTO)
+
+
+# ---------------------------------------------------------------------------
+# latency models
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_latency_tables_shapes_and_determinism(kind):
+    spec = LatencySpec(kind=kind, seed=3)
+    b1, j1 = delay_tables(spec, 12, 9, 4)
+    b2, j2 = delay_tables(spec, 12, 9, 4)
+    assert b1.shape == (12,) and j1.shape == (9, 4)
+    assert b1.dtype == np.int32 and j1.dtype == np.int32
+    assert (b1 >= 0).all() and (j1 >= 0).all()
+    np.testing.assert_array_equal(b1, b2)       # same seed, same traffic
+    np.testing.assert_array_equal(j1, j2)
+
+
+def test_identity_latency_is_all_zero():
+    base, jitter = delay_tables(LatencySpec(), 10, 7, 3)
+    assert not base.any() and not jitter.any()
+
+
+def test_flash_crowd_pattern():
+    spec = LatencySpec(kind="flash_crowd", period=4)
+    _, jitter = delay_tables(spec, 5, 8, 2)
+    for t in range(8):                 # every dispatch of a period lands
+        assert (jitter[t] == 4 - 1 - (t % 4)).all()   # on its last tick
+
+
+def test_latency_kind_validated():
+    with pytest.raises(ValueError, match="latency kind"):
+        LatencySpec(kind="warp")
+
+
+def test_max_delay_clipped_to_max_lag():
+    spec = LatencySpec(kind="stragglers", straggler_frac=1.0,
+                       straggler_delay=100)
+    base, jitter = delay_tables(spec, 6, 4, 2)
+    assert max_delay(spec, base, jitter, 5) == 5
+    idn = LatencySpec()
+    b0, j0 = delay_tables(idn, 6, 4, 2)
+    assert max_delay(idn, b0, j0, 5) == 0
+
+
+def test_async_config_threshold_validated():
+    with pytest.raises(ValueError, match="threshold"):
+        AsyncConfig(num_select=2, capacity=2, threshold=3).sizes()
+
+
+# ---------------------------------------------------------------------------
+# the parity oracle: identity latency + B = M = K  ==  sync, bit-exact
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _sweep_parity(selector):
+    sync = build_pair(SPEC, "dir_mild", selector)
+    apair, _ = build_async_pair(SPEC, "dir_mild", selector)
+    so = jax.tree_util.tree_map(np.asarray, sync.vmapped()(
+        sync.params0, sync.sstate0, sync.parts, sync.round_keys))
+    ao = jax.tree_util.tree_map(np.asarray, apair.vmapped()(
+        apair.params0, apair.sstate0, apair.parts, apair.round_keys))
+    return so, ao
+
+
+@functools.lru_cache(maxsize=None)
+def _client_data(seed=0):
+    scn = SPEC.scenario("dir_mild")
+    cfg = get_config(SPEC.arch)
+    train, test, _ = make_dataset(scn, SPEC.samples_train,
+                                  SPEC.samples_test, cfg.vocab_size,
+                                  SPEC.data_seed)
+    part = materialize(scn, seed, train, cfg.vocab_size,
+                       SPEC.num_clients, SPEC.capacity())
+    init_fn, apply_fn, _ = _make_model(SPEC, cfg, scn.data.dim)
+    idx = np.asarray(part.idx)
+    return (init_fn, apply_fn, np.asarray(train["x"])[idx],
+            np.asarray(train["y"])[idx], np.asarray(part.mask),
+            {k: np.asarray(v) for k, v in test.items()})
+
+
+def _standalone(selector, latency=LatencySpec(), **acfg_kw):
+    init_fn, apply_fn, cx, cy, cm, test = _client_data()
+    kw = dict(num_clients=SPEC.num_clients, num_select=SPEC.num_select,
+              ticks=SPEC.rounds, selector=selector, local=SPEC.local,
+              latency=latency, eval_every=SPEC.rounds, seed=0)
+    kw.update(acfg_kw)
+    srv = AsyncFederatedServer(init_fn, apply_fn, AsyncConfig(**kw),
+                               cx, cy, cm, test=test)
+    return srv.run()
+
+
+@functools.lru_cache(maxsize=None)
+def _standalone_identity(selector):
+    return _standalone(selector)
+
+
+@pytest.mark.parametrize("selector", ["hics", "cs"])
+def test_parity_sweep_driver(selector):
+    so, ao = _sweep_parity(selector)
+    np.testing.assert_array_equal(so["selected"], ao["selected"])
+    assert (so["train_loss"] == ao["train_loss"]).all()      # bit-exact
+    assert (so["test_acc"][:, -1] == ao["final_acc"]).all()
+    assert ao["fired"].all()              # every tick fires at B = M = K
+    assert ao["dropped"].sum() == 0
+    np.testing.assert_array_equal(ao["version"][:, -1],
+                                  np.full(len(SPEC.seeds), SPEC.rounds))
+
+
+@pytest.mark.parametrize("selector", ["hics", "cs"])
+def test_parity_scanned_server_driver(selector):
+    h = _standalone_identity(selector)
+    sh = run_host_reference(SPEC, "dir_mild", selector, 0,
+                            jit_rounds=True)
+    assert h["selected"] == sh["selected"]
+    np.testing.assert_array_equal(h["train_loss"], sh["train_loss"])
+    np.testing.assert_array_equal(h["test_acc"][-1], sh["test_acc"][-1])
+    assert h["aggregations"] == SPEC.rounds and h["dropped_total"] == 0
+
+
+@pytest.mark.parametrize("selector", ["hics", "cs"])
+def test_parity_host_driver(selector):
+    h = _standalone_identity(selector)
+    sh = run_host_reference(SPEC, "dir_mild", selector, 0,
+                            jit_rounds=False)
+    assert h["selected"] == sh["selected"]
+    np.testing.assert_allclose(h["train_loss"], sh["train_loss"],
+                               atol=1e-5)
+
+
+def test_full_all_selector_rejected():
+    # DivFL's ideal mode polls every client every tick — no async
+    # semantics; both entry points refuse it up front
+    with pytest.raises(ValueError, match="async semantics"):
+        build_async_pair(SPEC, "dir_mild", "divfl")
+    init_fn, apply_fn, cx, cy, cm, _ = _client_data()
+    with pytest.raises(ValueError, match="async semantics"):
+        AsyncFederatedServer(
+            init_fn, apply_fn,
+            AsyncConfig(num_clients=SPEC.num_clients, num_select=2,
+                        ticks=4, selector="divfl", local=SPEC.local),
+            cx, cy, cm)
+
+
+# ---------------------------------------------------------------------------
+# non-identity traffic: accounting invariants
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_traffic_accounting():
+    h = _standalone(
+        "hics", capacity=4, threshold=2,
+        latency=LatencySpec(kind="stragglers", straggler_frac=0.4,
+                            straggler_delay=3, seed=1),
+        ticks=10, eval_every=10)
+    assert np.isfinite(h["train_loss"]).all()
+    assert h["version"] == sorted(h["version"])      # monotone versions
+    assert h["aggregations"] >= 1
+    # conservation: every accepted arrival is either popped by an
+    # aggregation or still buffered at the end
+    assert sum(h["accepted"]) == 2 * h["aggregations"] + \
+        h["buffer_fill"][-1]
+    # arrivals never exceed dispatches (the rest is still in flight)
+    assert sum(h["accepted"]) + h["dropped_total"] <= 2 * 10
+
+
+def test_flash_crowd_overflow_dropped_and_counted():
+    h = _standalone(
+        "hics", capacity=2, threshold=2,
+        latency=LatencySpec(kind="flash_crowd", period=4),
+        max_lag=8, ticks=12, eval_every=12)
+    assert h["dropped_total"] > 0          # bursts overflow B = K ...
+    assert h["aggregations"] >= 1          # ... but training continues
+    assert np.isfinite(h["train_loss"]).all()
+
+
+def test_async_sweep_time_varying_scenario():
+    spec = dataclasses.replace(SPEC, scenarios=("diurnal_heavy_tail",))
+    res = run_async_sweep(spec, capacity=4, threshold=2)
+    cell = res["grid"]["diurnal_heavy_tail/hics"]
+    assert np.isfinite(cell["train_loss"]).all()
+    sel = np.asarray(cell["selected"])
+    assert ((sel >= 0) & (sel < SPEC.num_clients)).all()
+    assert all(v >= 1 for v in cell["final_version"])
+
+
+# ---------------------------------------------------------------------------
+# staleness ring: cache refresh == from-scratch under async arrivals
+# ---------------------------------------------------------------------------
+
+_N, _K, _C = 10, 3, 5
+
+
+def _ring_fn(slots=3):
+    return make_functional("hics", num_clients=_N, num_select=_K,
+                           total_rounds=8, num_classes=_C,
+                           stale_slots=slots)
+
+
+def _upd(fn, state, t, ids, rng):
+    ids = np.asarray(ids, np.int32)
+    rows = rng.normal(size=(len(ids), _C)).astype(np.float32)
+    for i, cid in enumerate(ids):    # duplicate ids carry equal rows so
+        first = int(np.where(ids == cid)[0][0])   # the scatter is
+        rows[i] = rows[first]                     # deterministic
+    return fn.update(state, t, jnp.asarray(ids),
+                     Observations(bias_updates=jnp.asarray(rows)))
+
+
+def test_stale_ring_refresh_matches_scratch():
+    fn = _ring_fn()
+    rng = np.random.default_rng(0)
+    state = fn.init(jax.random.PRNGKey(0))
+    # round A: three out-of-order cohorts fill the ring (3·K = 9 ids)
+    for t, ids in enumerate([[7, 2, 4], [2, 9, 0], [5, 3, 8]]):
+        state = _upd(fn, state, t, ids, rng)
+    assert int(state.stale_fill) == 9
+    _, state = fn.select(state, 3, jax.random.PRNGKey(1))
+    assert int(state.stale_fill) == 0
+    # round B: duplicates within + across cohorts, and a K = 0 cohort
+    state = _upd(fn, state, 4, [1, 6, 4], rng)
+    state = stale_append(state, jnp.zeros((0,), jnp.int32))    # K = 0
+    state = _upd(fn, state, 5, [4, 4, 1], rng)
+    _, state = fn.select(state, 6, jax.random.PRNGKey(2))
+    # from-scratch oracle: refresh every row against an empty cache
+    _, dist, stats = hics_selection_step_cached(
+        state.delta_b, jnp.zeros_like(state.dist_cache),
+        jnp.zeros_like(state.row_stats),
+        jnp.arange(_N, dtype=jnp.int32), 0.0025)
+    np.testing.assert_allclose(np.asarray(state.dist_cache),
+                               np.asarray(dist), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(state.row_stats),
+                               np.asarray(stats), atol=1e-5)
+
+
+def test_stale_ring_gated_select_is_noop_when_clean():
+    fn = _ring_fn()
+    rng = np.random.default_rng(1)
+    state = _upd(fn, _ring_fn().init(jax.random.PRNGKey(0)), 0,
+                 [0, 1, 2], rng)
+    _, s1 = fn.select(state, 1, jax.random.PRNGKey(1))
+    _, s2 = fn.select(s1, 2, jax.random.PRNGKey(2))   # nothing staled
+    np.testing.assert_array_equal(np.asarray(s1.dist_cache),
+                                  np.asarray(s2.dist_cache))
+    np.testing.assert_array_equal(np.asarray(s1.row_stats),
+                                  np.asarray(s2.row_stats))
+    assert int(s2.stale_fill) == 0
+
+
+def test_stale_append_empty_cohort_is_noop():
+    state = _ring_fn().init(jax.random.PRNGKey(0))
+    assert stale_append(state, jnp.zeros((0,), jnp.int32)) is state
+
+
+def test_stale_ring_overflow_raises():
+    state = _ring_fn().init(jax.random.PRNGKey(0))        # ring = 9
+    with pytest.raises(ValueError, match="stale_slots"):
+        stale_append(state, jnp.arange(10, dtype=jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# masked_select with ZERO available clients (satellite: defined picks,
+# no NaN weights, on host / scan / sweep drivers)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("selector", ["hics", "random"])
+def test_masked_select_zero_available_host(selector):
+    fn = make_functional(selector, num_clients=8, num_select=3,
+                         total_rounds=4, num_classes=5)
+    state = fn.init(jax.random.PRNGKey(0))
+    ids, out = masked_select(fn, state, 0, jax.random.PRNGKey(1),
+                             jnp.zeros(8, bool), jax.random.PRNGKey(2))
+    ids = np.asarray(ids)
+    assert ids.shape == (3,) and ((ids >= 0) & (ids < 8)).all()
+    w = np.asarray(out.weights)
+    assert np.isfinite(w).all()
+    np.testing.assert_array_equal(w, np.asarray(state.weights))
+
+
+def test_masked_select_zero_available_scan_and_sweep(monkeypatch):
+    # nobody is ever available: the round proceeds under-provisioned
+    # (picks stay defined) instead of deadlocking or going NaN
+    scn = dataclasses.replace(get_scenario("flaky_severe"),
+                              name="test_all_off", avail_p=1.0)
+    monkeypatch.setitem(SCENARIOS, "test_all_off", scn)
+    spec = dataclasses.replace(SPEC, scenarios=("test_all_off",),
+                               rounds=4)
+    pair = build_pair(spec, "test_all_off", "hics")
+    v = jax.tree_util.tree_map(np.asarray, pair.vmapped()(
+        pair.params0, pair.sstate0, pair.parts, pair.round_keys))
+    s = jax.tree_util.tree_map(np.asarray,
+                               pair.serial()(*pair.seed_slice(0)))
+    for sel in (v["selected"], s["selected"][None]):
+        assert ((sel >= 0) & (sel < spec.num_clients)).all()
+    assert np.isfinite(v["train_loss"]).all()
+    assert np.isfinite(v["test_acc"]).all()
+    assert np.isfinite(s["train_loss"]).all()
+    np.testing.assert_array_equal(v["selected"][0], s["selected"])

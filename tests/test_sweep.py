@@ -133,12 +133,28 @@ def test_full_update_selectors_buildable(selector):
     assert pair.sstate0.feats.shape[2] > 1      # |θ|-sized features
 
 
-def test_stateful_local_algos_rejected():
+@pytest.mark.parametrize("algo", ["feddyn", "moon"])
+def test_stateful_local_algos_match_host(algo):
+    """feddyn's per-client h and moon's previous-params memory ride the
+    sweep as an (N, ...) extras carry — gathered/scattered by cohort
+    ids exactly as the server loop does, so the vmapped engine matches
+    the host loop for stateful local algorithms too (the capability gap
+    the engine used to reject with a ValueError)."""
     spec = dataclasses.replace(
-        SPEC, local=LocalSpec(algo="feddyn", optimizer="sgd", lr=0.1,
-                              epochs=1, batch_size=32, mu=0.1))
-    with pytest.raises(ValueError, match="stateless"):
-        build_pair(spec, "dir_mild", "hics")
+        SPEC, scenarios=("dir_mild",), rounds=4,
+        local=LocalSpec(algo=algo, optimizer="sgd", lr=0.1,
+                        epochs=1, batch_size=32, mu=0.1))
+    pair = build_pair(spec, "dir_mild", "hics")
+    out = pair.vmapped()(pair.params0, pair.sstate0, pair.parts,
+                         pair.round_keys)
+    host = run_host_reference(spec, "dir_mild", "hics", 0)
+    assert host["selected"] == np.asarray(out["selected"][0]).tolist()
+    np.testing.assert_allclose(host["train_loss"],
+                               np.asarray(out["train_loss"][0]),
+                               atol=1e-5)
+    np.testing.assert_allclose(host["test_acc"][-1],
+                               np.asarray(out["test_acc"][0, -1]),
+                               atol=1e-5)
 
 
 def test_unknown_names_rejected():

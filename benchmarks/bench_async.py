@@ -121,7 +121,8 @@ def main(quick: bool = True):
               f"aggs={cell['aggregations']}  "
               f"dropped={cell['dropped_total']}", flush=True)
     save_result("async_server", out)
-    (REPO_ROOT / "BENCH_async.json").write_text(json.dumps(out,
+    from benchmarks.common import stamp_env
+    (REPO_ROOT / "BENCH_async.json").write_text(json.dumps(stamp_env(out),
                                                            indent=1))
     print(f"  wrote {REPO_ROOT / 'BENCH_async.json'}", flush=True)
     print(md_table(["config", "ticks/s", "to-target", "aggregations",

@@ -39,8 +39,13 @@ def _drive(sel, db=None, full=None, losses=None, rounds=8,
     from repro.fed.async_server import AsyncFederatedServer
     if isinstance(sel, AsyncFederatedServer):
         h = sel.run()
-        wall = h["wall_s"][warmup:] or h["wall_s"]
-        return {"s_per_tick": float(np.mean(wall)),
+        # segment timings (ticks never surface to the host): drop the
+        # first segment, which amortizes the scan compile, unless it is
+        # the only one
+        walls, counts = h["segment_wall_s"], h["segment_rounds"]
+        if len(walls) > 1:
+            walls, counts = walls[1:], counts[1:]
+        return {"s_per_tick": float(sum(walls) / sum(counts)),
                 "aggregations": int(h["aggregations"]),
                 "fired_frac": float(np.mean(h["fired"])),
                 "dropped_total": int(h["dropped_total"]),
@@ -294,7 +299,8 @@ def main(quick: bool = True):
     res["clustering_scaling"] = clus
     save_result("table3_overhead", res)
     # repo-root perf trajectory artifact (one file per concern)
-    (REPO_ROOT / "BENCH_selection.json").write_text(json.dumps({
+    from benchmarks.common import stamp_env
+    (REPO_ROOT / "BENCH_selection.json").write_text(json.dumps(stamp_env({
         "what": "fused vs unfused HiCS selection step (CPU oracle "
                 "backend; TPU path is the Pallas kernel pipeline)",
         "pre_gram_hbm_sweeps": {"fused": 1, "unfused": 3},
@@ -302,7 +308,7 @@ def main(quick: bool = True):
         "incremental_vs_full": ivf,
         "full_update_cached_vs_scratch": fucs,
         "clustering_scaling": clus,
-    }, indent=1))
+    }), indent=1))
     print(f"  wrote {REPO_ROOT / 'BENCH_selection.json'}", flush=True)
     thetas = sorted(next(iter(res.values())).keys()) \
         if "random" in res else []

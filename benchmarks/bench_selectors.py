@@ -117,8 +117,9 @@ def main(quick: bool = True):
     print("== bench_round_loop (jitted scan vs host loop) ==", flush=True)
     rl = bench_round_loop(ns=(64, 256, 512), rounds=10 if quick else 30)
     save_result("round_loop", rl)
+    from benchmarks.common import stamp_env
     (REPO_ROOT / "BENCH_round_loop.json").write_text(
-        json.dumps(rl, indent=1))
+        json.dumps(stamp_env(rl), indent=1))
     print(f"  wrote {REPO_ROOT / 'BENCH_round_loop.json'}", flush=True)
 
     print("== bench_selectors (Tables 1+2 analogue) ==", flush=True)

@@ -32,7 +32,9 @@ def main(quick: bool = True):
                         epochs=1, batch_size=32))
     res = bench_sweep(spec, include_host=quick)
     save_result("sweep_throughput", res)
-    (REPO_ROOT / "BENCH_sweep.json").write_text(json.dumps(res, indent=1))
+    from benchmarks.common import stamp_env
+    (REPO_ROOT / "BENCH_sweep.json").write_text(
+        json.dumps(stamp_env(res), indent=1))
     print(f"  wrote {REPO_ROOT / 'BENCH_sweep.json'}", flush=True)
     rows = [(cell, f"{d['vmapped_s']:.2f}", f"{d['serial_engine_s']:.2f}",
              f"{d['speedup_vs_serial']:.2f}x",

@@ -13,8 +13,21 @@ ART = Path(__file__).resolve().parent / "artifacts"
 def save_result(name: str, payload: dict) -> Path:
     ART.mkdir(parents=True, exist_ok=True)
     p = ART / f"{name}.json"
-    p.write_text(json.dumps(payload, indent=1, default=_np_default))
+    p.write_text(json.dumps(stamp_env(payload), indent=1,
+                            default=_np_default))
     return p
+
+
+def stamp_env(payload: dict) -> dict:
+    """Ensure the payload carries an ``env`` stamp (jax version,
+    backend/device kind, CPU count, git SHA) so ``tools/bench_gate.py``
+    can refuse cross-machine comparisons instead of flagging them as
+    regressions.  Every BENCH writer routes through this."""
+    if "env" not in payload:
+        from repro.telemetry import env_stamp
+        payload = dict(payload)
+        payload["env"] = env_stamp()
+    return payload
 
 
 def load_result(name: str) -> dict | None:

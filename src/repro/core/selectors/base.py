@@ -21,7 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.selectors.functional import (FunctionalSelector,
-                                             Observations, SelectorState)
+                                             Observations, SelectorState,
+                                             state_entropies)
 
 
 class ClientSelector:
@@ -156,7 +157,11 @@ class ClientSelector:
         return state
 
     def estimated_entropies(self) -> Optional[np.ndarray]:
-        """Latest Ĥ per client, or None before any Δb was observed."""
-        if self.fn.entropies is None or int(self.state.hist_count) == 0:
+        """Latest Ĥ per client, or None before any Δb was observed.
+        Same extraction as the scanned loop and the telemetry
+        ``selection`` group — all routes go through
+        :func:`~repro.core.selectors.functional.state_entropies`."""
+        if int(self.state.hist_count) == 0:
             return None
-        return np.asarray(self.fn.entropies(self.state))
+        ent = state_entropies(self.fn, self.state)
+        return np.asarray(ent) if ent.shape[0] else None

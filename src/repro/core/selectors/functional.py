@@ -95,6 +95,10 @@ class FunctionalSelector(NamedTuple):
     jit_capable: bool = True
     #: optional (state) -> (N,) Ĥ, for history recording inside the scan
     entropies: Optional[Callable[[SelectorState], jnp.ndarray]] = None
+    #: optional (state) -> {"cluster_sizes": (M,), "cluster_ent_spread":
+    #: ()} — clustering-health observables for the telemetry
+    #: ``selection`` group.  Pure/jit-compatible like ``entropies``.
+    diagnostics: Optional[Callable[[SelectorState], dict]] = None
     #: optional observed-full-update-width -> stored-feature-width map.
     #: Selectors that down-project |θ|-sized updates (cs/divfl with
     #: ``proj_dim``) store features narrower than the observations; the
@@ -134,6 +138,21 @@ def init_state(key: jax.Array, num_clients: int, weights=None,
         stale_ids=jnp.zeros(int(stale_len), jnp.int32),
         stale_fill=jnp.int32(0),
     )
+
+
+def state_entropies(fn: FunctionalSelector,
+                    state: SelectorState) -> jnp.ndarray:
+    """(N,) Ĥ estimate from a selector's state, or a zero-width (0,)
+    array when the selector doesn't estimate entropies.
+
+    The single entropy-extraction point shared by the host loop
+    (``ClientSelector.estimated_entropies``), the scanned round step,
+    the sweep engine, and the telemetry ``selection`` group — all four
+    see the same values by construction.  Pure/jit-compatible.
+    """
+    if fn.entropies is None:
+        return jnp.zeros((0,), jnp.float32)
+    return fn.entropies(state)
 
 
 def take_key(state: SelectorState, key: Optional[jax.Array]):

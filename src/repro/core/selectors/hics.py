@@ -141,8 +141,25 @@ def hics_functional(num_clients: int, num_select: int, total_rounds: int,
         return estimate_entropy(state.delta_b, temperature,
                                 normalize=normalize)
 
+    def diagnostics(state: SelectorState) -> dict:
+        # clustering-health observables for the telemetry ``selection``
+        # group: re-cluster the cached Eq. 9 distance (incremental path
+        # only — from-scratch mode has no resident distance to read)
+        # and report cluster sizes + the within-cluster Ĥ RMS spread.
+        ent = state.row_stats[:, 1]
+        labels = agglomerate_device(state.dist_cache, m, linkage=linkage,
+                                    precomputed=True)
+        means = cluster_means_device(ent, labels, m)
+        return {
+            "cluster_sizes": jnp.bincount(labels, length=m),
+            "cluster_ent_spread": jnp.sqrt(
+                jnp.mean(jnp.square(ent - means[labels]))),
+        }
+
     return FunctionalSelector("hics", REQUIRES, init, select, update,
-                              jit_capable=True, entropies=entropies)
+                              jit_capable=True, entropies=entropies,
+                              diagnostics=diagnostics if incremental
+                              else None)
 
 
 class HiCSFLSelector(ClientSelector):

@@ -61,12 +61,15 @@ import numpy as np
 from repro.core import (SELECTORS, Observations, head_bias_updates_stacked,
                         make_functional)
 from repro.core.hetero import head_num_classes
+from repro.core.selectors.functional import state_entropies
 from repro.fed.buffer import buffer_init, buffer_pop, buffer_push
 from repro.fed.client import (LocalSpec, init_extra, make_eval_fn,
                               make_local_update)
 from repro.fed.latency import LatencySpec, delay_tables, max_delay
 from repro.fed.server import (_tree_stack_gather, _tree_stack_scatter,
                               aggregate_params, full_sel_updates)
+from repro.telemetry import (MetricsSpec, TelemetryCtx, client_true_entropy,
+                             make_metrics, trace_span)
 
 #: requirement classes the async tick loop can satisfy on-device.
 _ASYNC_SCANNABLE = frozenset({"bias_sel", "loss_all", "full_sel"})
@@ -90,6 +93,10 @@ class AsyncConfig:
     seed: int = 0
     lr_decay_every: int = 10
     lr_decay: float = 0.5
+    #: telemetry metric groups to record (see repro.telemetry.GROUPS);
+    #: () = off.  The ``async`` group's buffer/staleness fields are
+    #: native here — the tick body hands them to the metrics step.
+    telemetry: tuple = ()
 
     def sizes(self):
         """Resolved (K, B, M) with the 0 → K defaults applied."""
@@ -130,7 +137,8 @@ def make_tick_step(cfg: AsyncConfig, fn, local_update: Callable,
                    eval_fn: Callable, get_batch: Callable,
                    get_all: Callable, base_delay, window: int,
                    select_ids: Optional[Callable] = None,
-                   has_extras: bool = False):
+                   has_extras: bool = False, metrics=None,
+                   true_entropy=None):
     """Build the jitted async tick body, shared by the standalone
     :class:`AsyncFederatedServer` and the vmapped async sweep runner.
 
@@ -138,6 +146,10 @@ def make_tick_step(cfg: AsyncConfig, fn, local_update: Callable,
     get_all()      -> (x (N, S, d), y, mask) for loss_all polling;
     select_ids(sstate, t, kr, k_sel) -> (ids, sstate) overrides plain
     ``fn.select`` (the sweep runner plugs availability masking in).
+    ``metrics`` is a compiled :class:`repro.telemetry.Metrics`
+    (defaults to all-off); its carry rides the tick carry and its
+    output dict is the scan's last output.  ``true_entropy`` feeds the
+    selection group's Ĥ-error fields.
 
     Returns ``(tick_step, init_runtime)`` where ``init_runtime(params)
     -> (pool, buffer)`` allocates the carry's runtime structures.
@@ -160,7 +172,9 @@ def make_tick_step(cfg: AsyncConfig, fn, local_update: Callable,
         select_ids = lambda sstate, t, kr, k_sel: fn.select(
             sstate, t, k_sel)
     base_delay = jnp.asarray(base_delay, jnp.int32)
-    has_entropies = fn.entropies is not None
+    if metrics is None:
+        metrics = make_metrics(MetricsSpec(), fn=fn,
+                               num_clients=cfg.num_clients, num_select=k)
 
     def init_runtime(params):
         c = head_num_classes(params) or 1
@@ -169,7 +183,8 @@ def make_tick_step(cfg: AsyncConfig, fn, local_update: Callable,
         return _pool_init(w, k, proto), buffer_init(b, proto)
 
     def tick_step(carry, xs):
-        params, extras, sstate, pool, buf, version = carry
+        params, extras, sstate, pool, buf, version, telc = carry
+        params_before = params
         t, kr, jit_row = xs
         k_sel, k_loc = jax.random.split(kr)
 
@@ -179,7 +194,7 @@ def make_tick_step(cfg: AsyncConfig, fn, local_update: Callable,
         decay = jnp.float32(cfg.lr_decay) ** (t // cfg.lr_decay_every)
         cx, cy, cm = get_batch(ids)
         ex_sel = (_tree_stack_gather(extras, ids) if has_extras else {})
-        new_params, new_extras, metrics = lu_v(
+        new_params, new_extras, lu_metrics = lu_v(
             params, ex_sel, cx, cy, cm, rngs, decay)
         if has_extras:
             # client-local algorithm state (feddyn h, moon prev) updates
@@ -215,7 +230,7 @@ def make_tick_step(cfg: AsyncConfig, fn, local_update: Callable,
         fire = buf.fill >= m
 
         def do_agg(args):
-            params, sstate, buf, version = args
+            params, sstate, buf, version, _ = args
             popped, pids, pver, buf2 = buffer_pop(buf, m)
             ages = (version - pver).astype(jnp.float32)
             wts = jnp.power(1.0 + ages, -beta)
@@ -241,17 +256,33 @@ def make_tick_step(cfg: AsyncConfig, fn, local_update: Callable,
             sstate2 = fn.update(sstate, t, pids, Observations(
                 bias_updates=popped["delta_b"][win],
                 full_updates=full_updates, losses=losses))
-            return agg, sstate2, buf2, version + jnp.int32(1)
+            return agg, sstate2, buf2, version + jnp.int32(1), ages
 
-        params, sstate, buf, version = jax.lax.cond(
+        idle_ages = jnp.full((m,), -1.0, jnp.float32)
+        params, sstate, buf, version, agg_ages = jax.lax.cond(
             fire, do_agg, lambda args: args,
-            (params, sstate, buf, version))
+            (params, sstate, buf, version, idle_ages))
 
-        ent = (fn.entropies(sstate) if has_entropies
-               else jnp.zeros((0,), jnp.float32))
-        out = (ids, jnp.mean(metrics["train_loss"]), ent,
-               fire, buf.fill, accepted, dropped, version)
-        return (params, extras, sstate, pool, buf, version), out
+        # version lag of the oldest still-buffered entry (0 when empty)
+        slots = jnp.arange(b, dtype=jnp.int32)
+        live_ver = jnp.where(slots < buf.fill,
+                             buf.version[jnp.mod(buf.head + slots, b)],
+                             jnp.iinfo(jnp.int32).max)
+        version_lag = jnp.where(buf.fill > 0,
+                                version - jnp.min(live_ver), 0)
+
+        ent = state_entropies(fn, sstate)
+        train_loss = jnp.mean(lu_metrics["train_loss"])
+        telc, tel = metrics.step(telc, TelemetryCtx(
+            t=t, ids=ids, state=sstate, train_loss=train_loss,
+            true_entropy=true_entropy, params_before=params_before,
+            params_after=params, bias_updates=db, lr_scale=decay,
+            fired=fire, fill=buf.fill, accepted=accepted,
+            dropped=dropped, version=version, version_lag=version_lag,
+            agg_ages=agg_ages))
+        out = (ids, train_loss, ent,
+               fire, buf.fill, accepted, dropped, version, tel)
+        return (params, extras, sstate, pool, buf, version, telc), out
 
     return tick_step, init_runtime
 
@@ -315,30 +346,44 @@ class AsyncFederatedServer:
                                  cfg.max_lag) + 1
         self._jitter = jnp.asarray(
             np.clip(jitter, 0, self._window - 1), jnp.int32)
+        self._metrics = make_metrics(
+            MetricsSpec(tuple(cfg.telemetry)), fn=self.fn,
+            num_clients=cfg.num_clients, num_select=k)
+        self._telc = self._metrics.init()
+        true_ent = (client_true_entropy(
+            self.y, self.mask, int(np.max(np.asarray(client_y))) + 1)
+            if "selection" in cfg.telemetry else None)
         self._tick_step, init_runtime = make_tick_step(
             cfg, self.fn, self._lu, self._eval,
             get_batch=lambda ids: (self.x[ids], self.y[ids],
                                    self.mask[ids]),
             get_all=lambda: (self.x, self.y, self.mask),
             base_delay=base, window=self._window,
-            has_extras=bool(self._extras))
+            has_extras=bool(self._extras), metrics=self._metrics,
+            true_entropy=true_ent)
         self._pool, self._buffer = init_runtime(self.params)
         self._version = jnp.int32(0)
         self._scan_jit = jax.jit(
             lambda carry, xs: jax.lax.scan(self._tick_step, carry, xs))
+        self._tel_segments: list = []
+        self.telemetry: Dict[str, np.ndarray] = {}
+        # timing: ticks never surface to the host, so only per-SEGMENT
+        # wall times exist here (segment 0 includes the compile);
+        # ticks_per_s is derived at the end of run().  wall_s stays an
+        # empty list for shape-compat with the sync history.
         self.history: Dict[str, list] = {
             "round": [], "train_loss": [], "selected": [],
             "fired": [], "buffer_fill": [], "accepted": [],
             "dropped": [], "version": [], "bias_entropy": [],
             "test_round": [], "test_loss": [], "test_acc": [],
-            "wall_s": [],
+            "wall_s": [], "segment_wall_s": [], "segment_rounds": [],
         }
 
     # ------------------------------------------------------------------
     def run(self, progress: bool = False) -> Dict[str, list]:
         cfg = self.cfg
         carry = (self.params, self._extras, self.state, self._pool,
-                 self._buffer, self._version)
+                 self._buffer, self._version, self._telc)
         seg_len = cfg.eval_every if self.test is not None else cfg.ticks
         t = 0
         while t < cfg.ticks:
@@ -350,11 +395,15 @@ class AsyncFederatedServer:
             ts = jnp.arange(t, t + n, dtype=jnp.int32)
             xs = (ts, jnp.stack(keys), self._jitter[t:t + n])
             t_start = time.perf_counter()
-            carry, outs = self._scan_jit(carry, xs)
-            jax.block_until_ready(carry)
-            wall = (time.perf_counter() - t_start) / n
+            with trace_span(f"fed/async_tick_segment[{n}]"):
+                carry, outs = self._scan_jit(carry, xs)
+                jax.block_until_ready(carry)
+            self.history["segment_wall_s"].append(
+                time.perf_counter() - t_start)
+            self.history["segment_rounds"].append(n)
+            tel_seg = outs[-1]
             (ids_seg, loss_seg, ent_seg, fired_seg, fill_seg, acc_seg,
-             drop_seg, ver_seg) = [np.asarray(o) for o in outs]
+             drop_seg, ver_seg) = [np.asarray(o) for o in outs[:-1]]
             for i in range(n):
                 self.history["round"].append(t + i)
                 self.history["train_loss"].append(float(loss_seg[i]))
@@ -366,10 +415,11 @@ class AsyncFederatedServer:
                 self.history["version"].append(int(ver_seg[i]))
                 self.history["bias_entropy"].append(
                     ent_seg[i].tolist() if ent_seg.shape[-1] else None)
-                self.history["wall_s"].append(wall)
+            self._tel_segments.append(jax.tree_util.tree_map(
+                np.asarray, tel_seg))
             t += n
             (self.params, self._extras, self.state, self._pool,
-             self._buffer, self._version) = carry
+             self._buffer, self._version, self._telc) = carry
             if self.test is not None:
                 tl, ta = self._eval(self.params, self.test["x"],
                                     self.test["y"], self.test["mask"])
@@ -384,6 +434,13 @@ class AsyncFederatedServer:
         self.history["dropped_total"] = int(np.sum(self.history["dropped"]))
         self.history["mean_fill"] = float(np.mean(
             self.history["buffer_fill"]))
+        wall = sum(self.history["segment_wall_s"])
+        self.history["ticks_per_s"] = (
+            sum(self.history["segment_rounds"]) / wall if wall else None)
+        if self._tel_segments:
+            self.telemetry = {
+                k: np.concatenate([seg[k] for seg in self._tel_segments])
+                for k in self._tel_segments[0]}
         return self.history
 
 

@@ -53,8 +53,11 @@ import numpy as np
 from repro.core import (SELECTORS, Observations, head_bias_updates_stacked,
                         make_selector)
 from repro.core.hetero import head_num_classes
+from repro.core.selectors.functional import state_entropies
 from repro.fed.client import (LocalSpec, init_extra, make_eval_fn,
                               make_local_update)
+from repro.telemetry import (MetricsSpec, TelemetryCtx, client_true_entropy,
+                             make_metrics, trace_span)
 
 #: requirements the scanned round loop can satisfy on-device.  All four
 #: are computable inside the jitted round step: loss_all is a vmapped
@@ -77,6 +80,10 @@ class FedConfig:
     lr_decay_every: int = 10     # paper: lr halves every 10 rounds
     lr_decay: float = 0.5
     jit_rounds: bool = False     # scan whole rounds instead of host loop
+    #: telemetry metric groups to record (see repro.telemetry.GROUPS);
+    #: () = off.  Enabled groups ride the jitted round step as an extra
+    #: scan output — the training trajectory is bit-identical either way.
+    telemetry: tuple = ()
 
 
 def _tree_stack_gather(stacked, ids):
@@ -199,10 +206,37 @@ class FederatedServer:
             self._grad_all = jax.jit(make_grad_all(apply_fn, cfg.local))
         self._round_step: Optional[Callable] = None
         self._scan_jit: Optional[Callable] = None
+        # device-resident telemetry (repro.telemetry): compiled once for
+        # this experiment's shape; with cfg.telemetry == () every field
+        # is zero-width and the step is free
+        self._metrics = make_metrics(
+            MetricsSpec(tuple(cfg.telemetry)), fn=self.selector.fn,
+            num_clients=cfg.num_clients, num_select=cfg.num_select)
+        self._telc = self._metrics.init()
+        # ground truth for the selection group's Ĥ-error fields: the
+        # true label entropy of each client's partition (device const)
+        self._true_ent = (
+            client_true_entropy(self.y, self.mask,
+                                int(np.max(np.asarray(client_y))) + 1)
+            if "selection" in cfg.telemetry else None)
+        self._tel_step = jax.jit(self._metrics.step)
+        self._tel_segments: list = []
+        self.telemetry: Dict[str, np.ndarray] = {}
+        # history timing semantics:
+        #   wall_s        — host loop only: per-round wall time (includes
+        #                   the first round's compile).  Empty in scanned
+        #                   mode, where rounds never hit the host.
+        #   segment_wall_s / segment_rounds — scanned mode only: wall
+        #                   time of each eval_every-round scan segment
+        #                   and its round count (segment 0 includes the
+        #                   compile).
+        #   rounds_per_s  — derived throughput over all rounds, set by
+        #                   _finish() for both drivers.
         self.history: Dict[str, list] = {
             "round": [], "train_loss": [], "selected": [],
             "test_round": [], "test_loss": [], "test_acc": [],
             "bias_entropy": [], "wall_s": [],
+            "segment_wall_s": [], "segment_rounds": [],
         }
 
     # ------------------------------------------------------------------
@@ -252,6 +286,7 @@ class FederatedServer:
             # Δb per participant (before aggregation overwrites params)
             bias_updates = head_bias_updates_stacked(self.params,
                                                      new_params)
+            params_before = self.params
             # aggregate: θ^{t+1} = (1/K) Σ θ_k
             self.params = aggregate_params(new_params)
 
@@ -269,6 +304,18 @@ class FederatedServer:
             self.selector.update(t, list(ids), Observations(
                 bias_updates=bias_updates, full_updates=full_updates,
                 losses=losses))
+            if cfg.telemetry:
+                # same compiled metrics step the scanned driver embeds,
+                # driven one round at a time
+                self._telc, tel = self._tel_step(self._telc, TelemetryCtx(
+                    t=jnp.int32(t), ids=jnp.asarray(ids, jnp.int32),
+                    state=self.selector.state,
+                    train_loss=jnp.mean(metrics["train_loss"]),
+                    true_entropy=self._true_ent,
+                    params_before=params_before, params_after=self.params,
+                    bias_updates=bias_updates, lr_scale=decay))
+                self._tel_segments.append(jax.tree_util.tree_map(
+                    lambda a: np.asarray(a)[None], tel))
 
             self.history["round"].append(t)
             self.history["train_loss"].append(
@@ -287,11 +334,13 @@ class FederatedServer:
     # ------------------------------------------------------------------
     def _make_round_step(self) -> Callable:
         """One fully-jitted federated round over the functional selector
-        core: (params, extras, selector state) carry, (t, key[, grad
-        key]) input.  Mirrors the host loop op-for-op — including the
-        post-aggregation full-update observations the CS/DivFL
-        selectors consume — so both drivers produce identical
-        participant sets from the same key chain."""
+        core: (params, extras, selector state, telemetry) carry,
+        (t, key[, grad key]) input.  Mirrors the host loop op-for-op —
+        including the post-aggregation full-update observations the
+        CS/DivFL selectors consume — so both drivers produce identical
+        participant sets from the same key chain.  The telemetry step
+        only READS round values, so with groups disabled its zero-width
+        outputs are dead code XLA removes."""
         cfg = self.cfg
         fn = self.selector.fn
         has_extras = bool(self._extras)
@@ -299,9 +348,10 @@ class FederatedServer:
         need_full_sel = "full_sel" in fn.requires
         need_full_all = "full_all" in fn.requires
         lu_v = jax.vmap(self._lu, in_axes=(None, 0, 0, 0, 0, 0, None))
+        tel_step, true_ent = self._metrics.step, self._true_ent
 
         def round_step(carry, xs):
-            params, extras, sstate = carry
+            params, extras, sstate, telc = carry
             if need_full_all:
                 t, kr, kg = xs
             else:
@@ -312,6 +362,7 @@ class FederatedServer:
             decay = jnp.float32(cfg.lr_decay) ** (t // cfg.lr_decay_every)
             ex_sel = (_tree_stack_gather(extras, ids) if has_extras
                       else {})
+            params_before = params
             new_params, new_extras, metrics = lu_v(
                 params, ex_sel, self.x[ids], self.y[ids], self.mask[ids],
                 rngs, decay)
@@ -332,10 +383,15 @@ class FederatedServer:
             sstate = fn.update(sstate, t, ids, Observations(
                 bias_updates=bias_updates, full_updates=full_updates,
                 losses=losses))
-            ent = (fn.entropies(sstate) if fn.entropies is not None
-                   else jnp.zeros((0,), jnp.float32))
-            out = (ids, jnp.mean(metrics["train_loss"]), ent)
-            return (params, extras, sstate), out
+            train_loss = jnp.mean(metrics["train_loss"])
+            telc, tel = tel_step(telc, TelemetryCtx(
+                t=t, ids=ids, state=sstate, train_loss=train_loss,
+                true_entropy=true_ent, params_before=params_before,
+                params_after=params, bias_updates=bias_updates,
+                lr_scale=decay))
+            ent = state_entropies(fn, sstate)
+            out = (ids, train_loss, ent, tel)
+            return (params, extras, sstate, telc), out
 
         return round_step
 
@@ -352,7 +408,8 @@ class FederatedServer:
         if self._scan_jit is None:
             self._scan_jit = jax.jit(
                 lambda carry, xs: jax.lax.scan(self._round_step, carry, xs))
-        carry = (self.params, self._extras, self.selector.state)
+        carry = (self.params, self._extras, self.selector.state,
+                 self._telc)
         # segments of eval_every rounds; evaluation lands after each
         # segment's LAST round (the host loop evals after rounds
         # 0, ee, 2ee, ... — same cadence, one round offset).  Equal
@@ -373,9 +430,16 @@ class FederatedServer:
             xs = ((ts, jnp.stack(keys), jnp.stack(gkeys)) if need_gk
                   else (ts, jnp.stack(keys)))
             t_start = time.perf_counter()
-            carry, (ids_seg, loss_seg, ent_seg) = self._scan_jit(carry, xs)
-            jax.block_until_ready(carry)
-            wall = (time.perf_counter() - t_start) / n
+            with trace_span(f"fed/scan_segment[{n}]"):
+                carry, (ids_seg, loss_seg, ent_seg, tel_seg) = \
+                    self._scan_jit(carry, xs)
+                jax.block_until_ready(carry)
+            # per-SEGMENT wall time: rounds never surface to the host
+            # here, so a per-round number would be fiction (the old
+            # code wrote the segment mean into every round's wall_s)
+            self.history["segment_wall_s"].append(
+                time.perf_counter() - t_start)
+            self.history["segment_rounds"].append(n)
             ids_np = np.asarray(ids_seg)
             loss_np = np.asarray(loss_seg)
             ent_np = np.asarray(ent_seg)
@@ -385,9 +449,11 @@ class FederatedServer:
                 self.history["selected"].append(ids_np[i].tolist())
                 self.history["bias_entropy"].append(
                     ent_np[i].tolist() if ent_np.shape[-1] else None)
-                self.history["wall_s"].append(wall)   # segment mean
+            self._tel_segments.append(jax.tree_util.tree_map(
+                np.asarray, tel_seg))
             t += n
-            self.params, self._extras, self.selector.state = carry
+            (self.params, self._extras, self.selector.state,
+             self._telc) = carry
             if self.test is not None:
                 self._eval_round(t - 1, progress)
         return self._finish()
@@ -406,6 +472,16 @@ class FederatedServer:
     def _finish(self) -> Dict[str, list]:
         self.history["select_seconds"] = self.selector.select_seconds
         self.history["update_seconds"] = self.selector.update_seconds
+        # throughput over every timed round, whichever driver ran
+        wall = (sum(self.history["segment_wall_s"])
+                or sum(self.history["wall_s"]))
+        rounds = (sum(self.history["segment_rounds"])
+                  or len(self.history["wall_s"]))
+        self.history["rounds_per_s"] = rounds / wall if wall else None
+        if self._tel_segments:
+            self.telemetry = {
+                k: np.concatenate([seg[k] for seg in self._tel_segments])
+                for k in self._tel_segments[0]}
         return self.history
 
 def rounds_to_accuracy(history: Dict[str, list], target: float

@@ -38,6 +38,7 @@ class ExperimentSpec:
     eval_every: int = 5
     seed: int = 0
     jit_rounds: bool = False       # scan whole rounds (see fed.server)
+    telemetry: Sequence[str] = ()  # metric groups (repro.telemetry.GROUPS)
 
 
 def build(spec: ExperimentSpec):
@@ -70,7 +71,7 @@ def build(spec: ExperimentSpec):
         rounds=spec.rounds, selector=spec.selector,
         selector_kw=spec.selector_kw, local=spec.local,
         eval_every=spec.eval_every, seed=spec.seed,
-        jit_rounds=spec.jit_rounds)
+        jit_rounds=spec.jit_rounds, telemetry=tuple(spec.telemetry))
     server = FederatedServer(init, apply, fed_cfg, X, Y, M, test=test,
                              features_fn=features)
     info = {"label_dists": label_dists, "client_alpha": client_alpha,

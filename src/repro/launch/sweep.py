@@ -65,9 +65,15 @@ def main():
                          ", 6 rounds")
     ap.add_argument("--host", action="store_true",
                     help="also time the FederatedServer host loop")
+    ap.add_argument("--telemetry", default="",
+                    help="write per-round telemetry to this JSONL path "
+                         "(enables the selection/training/fairness "
+                         "metric groups; see docs/observability.md)")
     ap.add_argument("--out", default="")
     ap.add_argument("--bench", default="BENCH_sweep.json")
     args = ap.parse_args()
+
+    groups = ("selection", "training", "fairness") if args.telemetry else ()
 
     if args.quick:
         spec = SweepSpec(
@@ -77,7 +83,8 @@ def main():
             samples_train=400, samples_test=120,
             data=SyntheticSpec(dim=16, rank=2, noise=0.5),
             local=LocalSpec(algo="fedavg", optimizer="sgd", lr=0.1,
-                            epochs=1, batch_size=32))
+                            epochs=1, batch_size=32),
+            telemetry=groups)
         bench_spec = SweepSpec(
             scenarios=("mixed_80_20", "dir_mild"),
             selectors=("hics", "random"), seeds=(0, 1, 2, 3),
@@ -97,13 +104,24 @@ def main():
             cap=args.cap or None,
             data=SyntheticSpec(dim=args.dim, noise=0.5),
             local=LocalSpec(algo="fedavg", optimizer="sgd", lr=args.lr,
-                            epochs=args.epochs, batch_size=32))
+                            epochs=args.epochs, batch_size=32),
+            telemetry=groups)
         bench_spec = spec
 
     print(f"== sweep: {len(spec.scenarios)} scenarios × "
           f"{len(spec.selectors)} selectors × {len(spec.seeds)} seeds "
           f"(vmapped) ==", flush=True)
     res = run_sweep(spec, progress=True)
+    if args.telemetry:
+        from repro.telemetry import write_sweep
+        cells = {name: cell["telemetry"]
+                 for name, cell in res["grid"].items()}
+        write_sweep(args.telemetry, cells,
+                    meta={"driver": "launch.sweep",
+                          "groups": list(groups),
+                          "rounds": spec.rounds,
+                          "seeds": list(spec.seeds)})
+        print(f"wrote telemetry {args.telemetry}", flush=True)
     if args.out:
         Path(args.out).write_text(json.dumps(_sanitize(res), indent=1))
         print(f"wrote {args.out}", flush=True)

@@ -93,6 +93,10 @@ def main():
     ap.add_argument("--alphas", type=float, nargs="+",
                     default=[0.05, 0.05, 0.05, 5.0])
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--telemetry", default="",
+                    help="write per-round telemetry to this JSONL path "
+                         "(training/selection/fairness fields; see "
+                         "docs/observability.md)")
     ap.add_argument("--out", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -155,6 +159,31 @@ def main():
                             params, step=t + 1)
     history["select_seconds"] = sel.select_seconds
     history["update_seconds"] = sel.update_seconds
+    if args.telemetry:
+        from repro.telemetry import write_run
+        # same field names as the in-scan metric groups
+        # (repro.telemetry.metrics) so downstream tooling reads both
+        counts = np.zeros(args.clients)
+        part, eff = [], []
+        for ids in history["selected"]:
+            counts[ids] += 1
+            p = counts / counts.sum()
+            h = -(p * np.log(np.where(p > 0, p, 1.0))).sum()
+            part.append((counts > 0).mean())
+            eff.append(np.exp(h) / args.clients)
+        tel = {"training/loss": np.asarray(history["loss"], np.float32),
+               "fairness/participation": np.asarray(part, np.float32),
+               "fairness/eff_participation": np.asarray(eff, np.float32)}
+        ents = history["bias_entropy"]
+        if any(e is not None for e in ents):
+            tel["selection/ent_mean"] = np.asarray(
+                [np.nan if e is None else float(np.mean(e)) for e in ents],
+                np.float32)
+        write_run(args.telemetry, tel,
+                  meta={"driver": "launch.train", "arch": cfg.name,
+                        "selector": args.selector, "rounds": args.rounds,
+                        "clients": args.clients})
+        print(f"wrote telemetry {args.telemetry}", flush=True)
     if args.out:
         Path(args.out).write_text(json.dumps(history, indent=1))
     print("done. final loss:", history["loss"][-1])

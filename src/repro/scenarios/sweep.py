@@ -56,8 +56,11 @@ from repro.models.classifier import (make_classifier,
                                      make_classifier_with_features)
 from repro.scenarios.availability import availability_mask, masked_select
 from repro.scenarios.partition_jax import Partition
+from repro.core.selectors.functional import state_entropies
 from repro.scenarios.registry import (Scenario, get_scenario, make_dataset,
                                       materialize, scenario_key)
+from repro.telemetry import (MetricsSpec, TelemetryCtx, client_true_entropy,
+                             env_stamp, make_metrics, trace_span)
 
 #: the sweep runs the server's scanned round body, so it can satisfy
 #: exactly the requirements that body can (one source of truth)
@@ -83,6 +86,10 @@ class SweepSpec:
     lr_decay: float = 0.5
     data_seed: int = 0
     data: Optional[SyntheticSpec] = None   # overrides every scenario's
+    #: telemetry metric groups (repro.telemetry.GROUPS); () = off.  The
+    #: telemetry pytree batches over the vmapped seed axis, so each
+    #: cell's fields come back (S, T, ...).
+    telemetry: Sequence[str] = ()
 
     def capacity(self) -> int:
         if self.cap is not None:
@@ -201,16 +208,25 @@ def make_seed_runner(spec: SweepSpec, scenario: Scenario, fn, apply_fn,
         grad_all_v = make_grad_all(apply_fn, spec.local)
     time_varying = scenario.time_varying
     has_entropies = fn.entropies is not None
+    metrics = make_metrics(MetricsSpec(tuple(spec.telemetry)), fn=fn,
+                           num_clients=cfg_n, num_select=cfg_k)
+    # class count for the selection group's true-entropy ground truth
+    # (host-side once; the per-seed (N,) vector is computed inside
+    # run_seed from the seed's own partition, so it vmaps)
+    want_true_ent = metrics.spec.enabled("selection")
+    n_cls = int(jnp.max(y)) + 1 if want_true_ent else 0
 
     def run_seed(params0, sstate0, part: Partition, round_keys):
         idx, mask = part.idx, part.mask
+        true_ent = (client_true_entropy(y[idx], mask, n_cls)
+                    if want_true_ent else None)
         ex0 = init_extra(spec.local, params0) if has_extras else None
         extras0 = (jax.tree_util.tree_map(
             lambda l: jnp.broadcast_to(l, (cfg_n,) + l.shape), ex0)
             if ex0 else {})
 
         def round_step(carry, xs):
-            params, extras, sstate = carry
+            params, extras, sstate, telc = carry
             if need_full_all:          # round_keys rows are (kr, kg)
                 t, key_pair = xs
                 kr, kg = key_pair[0], key_pair[1]
@@ -229,7 +245,8 @@ def make_seed_runner(spec: SweepSpec, scenario: Scenario, fn, apply_fn,
             sel_idx = idx[ids]                              # (K, cap)
             ex_sel = (_tree_stack_gather(extras, ids) if has_extras
                       else {})
-            new_params, new_extras, metrics = lu_v(
+            params_before = params
+            new_params, new_extras, lu_metrics = lu_v(
                 params, ex_sel, x[sel_idx], y[sel_idx], mask[ids], rngs,
                 decay)
             if has_extras:
@@ -247,17 +264,25 @@ def make_seed_runner(spec: SweepSpec, scenario: Scenario, fn, apply_fn,
             sstate = fn.update(sstate, t, ids, Observations(
                 bias_updates=bias_updates, full_updates=full_updates,
                 losses=losses))
-            ent = (jnp.mean(fn.entropies(sstate)) if has_entropies
+            train_loss = jnp.mean(lu_metrics["train_loss"])
+            telc, tel = metrics.step(telc, TelemetryCtx(
+                t=t, ids=ids, state=sstate, train_loss=train_loss,
+                true_entropy=true_ent, params_before=params_before,
+                params_after=params, bias_updates=bias_updates,
+                lr_scale=decay))
+            ents = state_entropies(fn, sstate)
+            ent = (jnp.mean(ents) if has_entropies
                    else jnp.float32(0.0))
             _, acc = eval_fn(params, test["x"], test["y"], test["mask"])
-            return (params, extras, sstate), (
-                ids, jnp.mean(metrics["train_loss"]), ent, acc)
+            return (params, extras, sstate, telc), (
+                ids, train_loss, ent, acc, tel)
 
         ts = jnp.arange(spec.rounds, dtype=jnp.int32)
-        (params, extras, sstate), (ids, loss, ent, acc) = jax.lax.scan(
-            round_step, (params0, extras0, sstate0), (ts, round_keys))
+        carry0 = (params0, extras0, sstate0, metrics.init())
+        _, (ids, loss, ent, acc, tel) = jax.lax.scan(
+            round_step, carry0, (ts, round_keys))
         return {"selected": ids, "train_loss": loss, "mean_entropy": ent,
-                "test_acc": acc}
+                "test_acc": acc, "telemetry": tel}
 
     return run_seed
 
@@ -342,9 +367,10 @@ def run_sweep(spec: SweepSpec, progress: bool = False) -> Dict[str, Any]:
     for scenario_name in spec.scenarios:
         for selector in spec.selectors:
             pair = build_pair(spec, scenario_name, selector)
-            out = pair.vmapped()(pair.params0, pair.sstate0, pair.parts,
-                                 pair.round_keys)
-            out = jax.tree_util.tree_map(np.asarray, out)
+            with trace_span(f"sweep/{scenario_name}/{selector}"):
+                out = pair.vmapped()(pair.params0, pair.sstate0,
+                                     pair.parts, pair.round_keys)
+                out = jax.tree_util.tree_map(np.asarray, out)
             acc, ent = out["test_acc"], out["mean_entropy"]
             cell = {
                 "seeds": [int(s) for s in spec.seeds],
@@ -361,6 +387,7 @@ def run_sweep(spec: SweepSpec, progress: bool = False) -> Dict[str, Any]:
                 "entropy_std": ent.std(axis=0).tolist(),
                 "train_loss_mean": out["train_loss"].mean(axis=0).tolist(),
                 "overflow_frac": pair.overflow_frac,
+                "telemetry": out["telemetry"],         # {field: (S, T, ...)}
             }
             grid[f"{scenario_name}/{selector}"] = cell
             if progress:
@@ -430,11 +457,18 @@ def make_async_seed_runner(spec: SweepSpec, scenario: Scenario, fn,
     eval_fn = make_eval_fn(apply_fn)
     time_varying = scenario.time_varying
     has_entropies = fn.entropies is not None
+    k_sel = acfg.sizes()[0]
+    metrics = make_metrics(MetricsSpec(tuple(spec.telemetry)), fn=fn,
+                           num_clients=cfg_n, num_select=k_sel)
+    want_true_ent = metrics.spec.enabled("selection")
+    n_cls = int(jnp.max(y)) + 1 if want_true_ent else 0
 
     def run_seed(params0, sstate0, part: Partition, round_keys):
         idx, mask = part.idx, part.mask
         get_batch = lambda ids: (x[idx[ids]], y[idx[ids]], mask[ids])
         get_all = lambda: (x[idx], y[idx], mask)
+        true_ent = (client_true_entropy(y[idx], mask, n_cls)
+                    if want_true_ent else None)
         select_fn = None
         if time_varying:
             def select_fn(sstate, t, kr, k_sel):
@@ -444,15 +478,17 @@ def make_async_seed_runner(spec: SweepSpec, scenario: Scenario, fn,
                                      jax.random.fold_in(kr, 2))
         tick_step, init_runtime = make_tick_step(
             acfg, fn, lu, eval_fn, get_batch, get_all, base, window,
-            select_ids=select_fn, has_extras=has_extras)
+            select_ids=select_fn, has_extras=has_extras,
+            metrics=metrics, true_entropy=true_ent)
         pool0, buf0 = init_runtime(params0)
         ex0 = init_extra(spec.local, params0) if has_extras else None
         extras0 = (jax.tree_util.tree_map(
             lambda l: jnp.broadcast_to(l, (cfg_n,) + l.shape), ex0)
             if ex0 else {})
         ts = jnp.arange(acfg.ticks, dtype=jnp.int32)
-        carry0 = (params0, extras0, sstate0, pool0, buf0, jnp.int32(0))
-        carry, (ids, loss, ent, fired, fill, acc_c, drop, ver) = \
+        carry0 = (params0, extras0, sstate0, pool0, buf0, jnp.int32(0),
+                  metrics.init())
+        carry, (ids, loss, ent, fired, fill, acc_c, drop, ver, tel) = \
             jax.lax.scan(tick_step, carry0, (ts, round_keys, jitter_dev))
         params = carry[0]
         _, final_acc = eval_fn(params, test["x"], test["y"],
@@ -462,7 +498,8 @@ def make_async_seed_runner(spec: SweepSpec, scenario: Scenario, fn,
         return {"selected": ids, "train_loss": loss,
                 "mean_entropy": mean_ent, "fired": fired,
                 "buffer_fill": fill, "accepted": acc_c, "dropped": drop,
-                "version": ver, "final_acc": final_acc}
+                "version": ver, "final_acc": final_acc,
+                "telemetry": tel}
 
     return run_seed
 
@@ -566,6 +603,7 @@ def run_async_sweep(spec: SweepSpec, capacity: int = 0,
                 "mean_fill": out["buffer_fill"].mean(axis=1).tolist(),
                 "final_version": out["version"][:, -1].tolist(),
                 "overflow_frac": pair.overflow_frac,
+                "telemetry": out["telemetry"],         # {field: (S, T, ...)}
             }
             grid[f"{scenario_name}/{selector}"] = cell
             if progress:
@@ -593,6 +631,7 @@ def bench_sweep(spec: SweepSpec, include_host: bool = False
         "what": "vmapped multi-seed sweep vs python seed loop",
         "seeds": [int(s) for s in spec.seeds],
         "rounds": spec.rounds, "num_clients": spec.num_clients,
+        "env": env_stamp(),
         "grid": {},
     }
     for scenario_name in spec.scenarios:

@@ -1,0 +1,39 @@
+"""Device-resident telemetry: in-scan metrics pytrees, host-side JSONL
+export, and profiler trace hooks.
+
+Three pieces, one discipline (nothing leaves the device mid-scan):
+
+  metrics.py — a :class:`MetricsSpec` registry of metric *groups*
+               (``selection`` / ``training`` / ``fairness`` /
+               ``async``); each enabled group contributes fields to a
+               flat ``Telemetry`` dict pytree emitted as an extra
+               ``lax.scan`` output by all three drivers (sync scanned
+               loop, async tick scan, vmapped sweep).  Disabled groups
+               materialize zero-width arrays — same pytree structure,
+               no second code path, no re-jits.
+  export.py — flattens stacked telemetry to JSONL + a summary dict,
+               and stamps environment metadata (jax version, backend,
+               git SHA) into benchmark artifacts so the bench gate can
+               refuse cross-machine comparisons.
+  trace.py  — ``jax.profiler`` span annotations behind the
+               ``REPRO_TRACE=1`` env switch; the Pallas kernel call
+               sites and the drivers' scan segments are wrapped, so
+               ``jax.profiler.trace`` dumps are labeled by subsystem.
+
+See docs/observability.md for the full tour.
+"""
+from repro.telemetry.export import (env_stamp, read_jsonl, records_from_telemetry,
+                                    summarize, telemetry_from_records,
+                                    write_jsonl, write_run, write_sweep)
+from repro.telemetry.metrics import (GROUPS, Metrics, MetricsSpec,
+                                     TelemetryCtx, client_true_entropy,
+                                     make_metrics)
+from repro.telemetry.trace import annotate, trace_enabled, trace_span
+
+__all__ = [
+    "GROUPS", "Metrics", "MetricsSpec", "TelemetryCtx",
+    "client_true_entropy", "make_metrics",
+    "env_stamp", "read_jsonl", "records_from_telemetry", "summarize",
+    "telemetry_from_records", "write_jsonl", "write_run", "write_sweep",
+    "annotate", "trace_enabled", "trace_span",
+]

@@ -1,0 +1,64 @@
+"""Profiler trace hooks behind the ``REPRO_TRACE=1`` env switch.
+
+``jax.profiler.trace`` dumps are flat without annotations: every scan
+segment and kernel dispatch is an anonymous XLA program.  These two
+wrappers label the repo's subsystems —
+
+  * :func:`annotate` decorates a function so its execution shows up as
+    a named span (``jax.profiler.annotate_function``); the Pallas
+    kernel entry points in ``repro.kernels.ops`` are wrapped with
+    ``kernels/<name>`` labels.
+  * :func:`trace_span` is the context-manager form
+    (``jax.profiler.TraceAnnotation``); the sync scanned loop, the
+    async tick scan and the sweep engine wrap their device dispatches
+    in ``fed/...`` / ``sweep/...`` spans.
+
+Both are exact no-ops unless ``REPRO_TRACE=1`` is set in the
+environment at import time, so the hot paths carry zero overhead by
+default and the traced program is byte-identical either way (an
+annotation names a span; it does not change what XLA compiles).
+
+Usage::
+
+    REPRO_TRACE=1 python - <<'PY'
+    import jax
+    with jax.profiler.trace("/tmp/trace"):
+        ...   # spans now carry kernels/... and fed/... labels
+    PY
+
+This module deliberately imports nothing from the rest of the repo:
+``repro.kernels`` wraps its entry points with it, and the package
+``__init__`` chain must stay cycle-free.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Callable
+
+_ENABLED = os.environ.get("REPRO_TRACE", "") == "1"
+
+
+def trace_enabled() -> bool:
+    """Whether ``REPRO_TRACE=1`` was set when the process started."""
+    return _ENABLED
+
+
+def annotate(name: str) -> Callable:
+    """Decorator: label a function as a profiler span (no-op unless
+    ``REPRO_TRACE=1``)."""
+    def deco(fn: Callable) -> Callable:
+        if not _ENABLED:
+            return fn
+        import jax.profiler
+        return jax.profiler.annotate_function(fn, name=name)
+    return deco
+
+
+def trace_span(name: str):
+    """Context manager: label a code region as a profiler span (no-op
+    unless ``REPRO_TRACE=1``)."""
+    if not _ENABLED:
+        return contextlib.nullcontext()
+    import jax.profiler
+    return jax.profiler.TraceAnnotation(name)

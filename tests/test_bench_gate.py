@@ -1,0 +1,111 @@
+"""tools/bench_gate.py: rule matching, regression detection, tolerance,
+and the env-stamp comparability refusal."""
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+_spec = importlib.util.spec_from_file_location(
+    "bench_gate", REPO / "tools" / "bench_gate.py")
+bg = importlib.util.module_from_spec(_spec)
+# dataclasses resolves the module through sys.modules when evaluating
+# the (PEP 563) string annotations — register before exec
+import sys
+sys.modules["bench_gate"] = bg
+_spec.loader.exec_module(bg)
+
+ENV_A = {"backend": "cpu", "device_kind": "cpu", "cpu_count": 8}
+ENV_B = {"backend": "cpu", "device_kind": "cpu", "cpu_count": 64}
+
+
+def _selection(speedup, env=ENV_A):
+    return {"env": dict(env),
+            "results": {"N64_C32768": {"speedup": speedup,
+                                       "fused_ms": 1.0}},
+            "incremental_vs_full": {"N=64": {"speedup": 5.0}}}
+
+
+def _dirs(tmp_path, fresh, base):
+    fd, bd = tmp_path / "fresh", tmp_path / "base"
+    fd.mkdir(), bd.mkdir()
+    (fd / "BENCH_selection.json").write_text(json.dumps(fresh))
+    (bd / "BENCH_selection.json").write_text(json.dumps(base))
+    return fd, bd
+
+
+def test_flatten_and_match():
+    flat = bg.flatten(_selection(1.6))
+    assert flat["results.N64_C32768.speedup"] == 1.6
+    assert bg.match("results.*.speedup", "results.N64_C32768.speedup")
+    assert not bg.match("results.*.speedup",
+                        "results.N64_C32768.fused_ms")
+    # * is segment-local: never crosses a dot
+    assert not bg.match("results.*", "results.N64_C32768.speedup")
+
+
+def test_within_tolerance_passes(tmp_path):
+    fd, bd = _dirs(tmp_path, _selection(1.5), _selection(1.6))  # -6%
+    assert bg.run_gate(baseline_dir=bd, fresh_dir=fd) == 0
+
+
+def test_regression_fails(tmp_path):
+    fd, bd = _dirs(tmp_path, _selection(1.2), _selection(1.6))  # -25%
+    assert bg.run_gate(baseline_dir=bd, fresh_dir=fd) == 1
+
+
+def test_improvement_passes(tmp_path):
+    fd, bd = _dirs(tmp_path, _selection(3.2), _selection(1.6))  # +100%
+    assert bg.run_gate(baseline_dir=bd, fresh_dir=fd) == 0
+
+
+def test_lower_is_better_direction(tmp_path):
+    base = {"env": dict(ENV_A),
+            "clustering_scaling": {"N=64": {"device_over_numpy": 1.0}}}
+    worse = {"env": dict(ENV_A),
+             "clustering_scaling": {"N=64": {"device_over_numpy": 2.5}}}
+    fd, bd = _dirs(tmp_path, worse, base)       # +150%, beyond the ±2x
+    assert bg.run_gate(baseline_dir=bd, fresh_dir=fd) == 1
+    fd2 = tmp_path / "fresh2"
+    fd2.mkdir()
+    better = {"env": dict(ENV_A),
+              "clustering_scaling": {"N=64": {"device_over_numpy": 0.5}}}
+    (fd2 / "BENCH_selection.json").write_text(json.dumps(better))
+    assert bg.run_gate(baseline_dir=bd, fresh_dir=fd2) == 0
+
+
+def test_env_mismatch_skips_not_fails(tmp_path, capsys):
+    """A 25% regression measured on a different machine is NOT a
+    regression — the gate must skip the file and exit 0."""
+    fd, bd = _dirs(tmp_path, _selection(1.2, env=ENV_B),
+                   _selection(1.6, env=ENV_A))
+    assert bg.run_gate(baseline_dir=bd, fresh_dir=fd) == 0
+    assert "env mismatch" in capsys.readouterr().out
+
+
+def test_unstamped_baseline_still_compared(tmp_path):
+    """Legacy artifacts without an env stamp gate normally."""
+    base = _selection(1.6)
+    del base["env"]
+    fd, bd = _dirs(tmp_path, _selection(1.2), base)
+    assert bg.run_gate(baseline_dir=bd, fresh_dir=fd) == 1
+
+
+def test_missing_baseline_skips(tmp_path):
+    fd = tmp_path / "fresh"
+    fd.mkdir()
+    (fd / "BENCH_selection.json").write_text(json.dumps(_selection(1.6)))
+    bd = tmp_path / "empty"
+    bd.mkdir()
+    assert bg.run_gate(baseline_dir=bd, fresh_dir=fd) == 0
+
+
+def test_selftest_on_real_artifacts():
+    """The CI acceptance bar: an injected 25% drop in a
+    BENCH_selection.json speedup must fail while the committed
+    artifacts pass."""
+    if not (REPO / "BENCH_selection.json").exists():
+        pytest.skip("no committed BENCH_selection.json")
+    assert bg.selftest(baseline_dir=None) == 0

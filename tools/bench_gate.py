@@ -1,0 +1,278 @@
+#!/usr/bin/env python
+"""Bench regression gate: fresh BENCH_*.json vs committed baselines.
+
+Compares the ``BENCH_*.json`` trajectory artifacts at the repo root
+(the "fresh" run, produced by ``python -m benchmarks.run`` or the
+individual ``benchmarks/bench_*.py`` scripts) against committed
+baselines and fails when a tracked metric regresses beyond its
+relative tolerance.
+
+Baselines come from ``git show HEAD:BENCH_<name>.json`` by default,
+so the gate answers "did *this* change slow anything down?".
+Pass ``--baseline-dir DIR`` to compare against a directory of saved
+artifacts instead.
+
+Rules are glob-style dotted paths into the JSON (``results.*.speedup``)
+with a direction (higher- or lower-is-better) and a relative tolerance.
+Wall-clock numbers on shared runners are noisy, so tolerances are
+deliberately generous — the gate exists to catch real regressions
+(2x slowdowns from an accidental re-jit), not 5% jitter.
+
+Every artifact carries an ``env`` stamp (see
+``repro.telemetry.export.env_stamp``).  When fresh and baseline stamps
+disagree on backend / device kind / CPU count the numbers are not
+comparable; the gate *skips* that file with a notice instead of
+reporting phantom regressions (exit 0).
+
+Usage:
+    python tools/bench_gate.py                  # gate vs HEAD
+    python tools/bench_gate.py --baseline-dir saved/
+    python tools/bench_gate.py --selftest       # verify the gate works
+
+CI runs ``--selftest`` (the gate must catch an injected 25% regression
+and pass the untouched artifacts) and then the real gate.
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import fnmatch
+import json
+import subprocess
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+# BENCH_*.json trajectory artifacts live at the repo root
+ART = REPO
+
+HIGHER, LOWER = "higher", "lower"
+
+
+@dataclass(frozen=True)
+class Rule:
+    pattern: str        # glob-style dotted path, e.g. "results.*.speedup"
+    direction: str      # HIGHER or LOWER is better
+    rtol: float         # relative tolerance before flagging
+
+
+# Tracked metrics per artifact.  Ratios (speedups) are steadier than raw
+# wall-clock, so they get tighter tolerances; absolute throughput gets
+# looser ones.  Paths are matched segment-wise with fnmatch.
+RULES: dict[str, list[Rule]] = {
+    "BENCH_selection.json": [
+        # same-machine timing ratio — stable, and the CI acceptance bar
+        # is "a >=20% drop here must fail", so the tolerance sits below
+        Rule("results.*.speedup", HIGHER, 0.15),
+        Rule("incremental_vs_full.*.speedup", HIGHER, 0.30),
+        Rule("full_update_cached_vs_scratch.*.speedup", HIGHER, 0.30),
+        # single-shot ms-scale timings in both numerator and
+        # denominator — flaps ~1.8x run to run on CPU, so only a >2x
+        # drift (an algorithmic regression) is signal
+        Rule("clustering_scaling.*.device_over_numpy", LOWER, 1.00),
+    ],
+    "BENCH_round_loop.json": [
+        Rule("*.host_rounds_per_s", HIGHER, 0.40),
+        Rule("*.scan_rounds_per_s", HIGHER, 0.40),
+        Rule("*.speedup", HIGHER, 0.35),
+    ],
+    # speedup_vs_serial is deliberately NOT gated: at the quick tier it
+    # is a ratio of two ~50ms wall times and flaps ±2x run to run.
+    # speedup_vs_host divides a multi-second host loop by vmapped_s, so
+    # the ratio is large and far steadier.
+    "BENCH_sweep.json": [
+        Rule("grid.*.speedup_vs_host", HIGHER, 0.60),
+        Rule("grid.*.vmapped_s", LOWER, 0.60),
+    ],
+    "BENCH_async.json": [
+        Rule("sync.rounds_per_s", HIGHER, 0.40),
+        Rule("async.*.ticks_per_s", HIGHER, 0.40),
+        Rule("async.*.s_per_tick", LOWER, 0.60),
+    ],
+}
+
+
+def flatten(obj, prefix: str = "") -> dict[str, float]:
+    """Numeric leaves of a nested dict as {dotted.path: value}."""
+    out: dict[str, float] = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            p = f"{prefix}.{k}" if prefix else str(k)
+            out.update(flatten(v, p))
+    elif isinstance(obj, bool):
+        pass                       # bool is an int subclass — exclude
+    elif isinstance(obj, (int, float)):
+        out[prefix] = float(obj)
+    return out
+
+
+def match(pattern: str, path: str) -> bool:
+    """Segment-wise glob match so ``*`` never crosses a dot."""
+    pp, sp = pattern.split("."), path.split(".")
+    return len(pp) == len(sp) and all(
+        fnmatch.fnmatch(s, p) for p, s in zip(pp, sp))
+
+
+def git_baseline(name: str) -> dict | None:
+    try:
+        blob = subprocess.run(
+            ["git", "show", f"HEAD:{name}"],
+            cwd=REPO, capture_output=True, text=True, check=True).stdout
+        return json.loads(blob)
+    except (subprocess.CalledProcessError, json.JSONDecodeError):
+        return None
+
+
+@dataclass
+class Row:
+    file: str
+    path: str
+    base: float
+    fresh: float
+    rtol: float
+    direction: str
+
+    @property
+    def change(self) -> float:
+        """Relative change, signed so positive is always 'better'."""
+        if self.base == 0:
+            return 0.0
+        raw = (self.fresh - self.base) / abs(self.base)
+        return raw if self.direction == HIGHER else -raw
+
+    @property
+    def regressed(self) -> bool:
+        return self.change < -self.rtol
+
+
+def gate_file(name: str, fresh: dict, base: dict) -> tuple[list[Row], str]:
+    """Returns (rows, skip_reason). Empty skip_reason == comparable."""
+    from repro.telemetry.export import COMPARE_KEYS, env_comparable
+
+    fe, be = fresh.get("env"), base.get("env")
+    if fe and be and not env_comparable(fe, be):
+        diff = {k: (be.get(k), fe.get(k)) for k in COMPARE_KEYS
+                if be.get(k) != fe.get(k)}
+        return [], f"env mismatch {diff} — numbers not comparable"
+
+    f_flat, b_flat = flatten(fresh), flatten(base)
+    rows = []
+    for rule in RULES.get(name, []):
+        for path, fval in sorted(f_flat.items()):
+            if match(rule.pattern, path) and path in b_flat:
+                rows.append(Row(name, path, b_flat[path], fval,
+                                rule.rtol, rule.direction))
+    return rows, ""
+
+
+def print_table(rows: list[Row]) -> None:
+    headers = ["metric", "baseline", "fresh", "change", "tol", "status"]
+    table = []
+    for r in rows:
+        table.append([
+            f"{r.file}:{r.path}", f"{r.base:.4g}", f"{r.fresh:.4g}",
+            f"{r.change:+.1%}", f"±{r.rtol:.0%}",
+            "REGRESSED" if r.regressed else "ok"])
+    widths = [max(len(h), *(len(t[i]) for t in table)) if table else len(h)
+              for i, h in enumerate(headers)]
+    line = "  ".join(h.ljust(w) for h, w in zip(headers, widths))
+    print(line)
+    print("-" * len(line))
+    for t in table:
+        print("  ".join(c.ljust(w) for c, w in zip(t, widths)))
+
+
+def run_gate(baseline_dir: Path | None = None,
+             fresh_dir: Path | None = None) -> int:
+    fresh_dir = fresh_dir or ART
+    any_rows, regressions, checked = [], [], 0
+    for name in sorted(RULES):
+        fp = fresh_dir / name
+        if not fp.exists():
+            print(f"[bench-gate] {name}: no fresh artifact — skipped")
+            continue
+        fresh = json.loads(fp.read_text())
+        if baseline_dir is not None:
+            bp = baseline_dir / name
+            base = json.loads(bp.read_text()) if bp.exists() else None
+        else:
+            base = git_baseline(name)
+        if base is None:
+            print(f"[bench-gate] {name}: no baseline — skipped")
+            continue
+        rows, skip = gate_file(name, fresh, base)
+        if skip:
+            print(f"[bench-gate] {name}: SKIP ({skip})")
+            continue
+        checked += 1
+        any_rows.extend(rows)
+        regressions.extend(r for r in rows if r.regressed)
+
+    if any_rows:
+        print()
+        print_table(any_rows)
+        print()
+    if regressions:
+        print(f"[bench-gate] FAIL: {len(regressions)} metric(s) regressed "
+              f"beyond tolerance across {checked} artifact(s).")
+        return 1
+    print(f"[bench-gate] OK: {len(any_rows)} metric(s) across "
+          f"{checked} artifact(s) within tolerance.")
+    return 0
+
+
+def selftest(baseline_dir: Path | None) -> int:
+    """The gate must (a) pass the real artifacts and (b) catch an
+    injected 25% drop in a BENCH_selection.json speedup."""
+    import tempfile
+
+    print("[bench-gate] selftest: real artifacts should pass")
+    if run_gate(baseline_dir) != 0:
+        print("[bench-gate] selftest FAIL: real artifacts were flagged")
+        return 1
+
+    src = ART / "BENCH_selection.json"
+    if not src.exists():
+        print("[bench-gate] selftest FAIL: BENCH_selection.json missing")
+        return 1
+    doc = json.loads(src.read_text())
+    injected = copy.deepcopy(doc)
+    paths = [p for p in flatten(injected)
+             if match("results.*.speedup", p)]
+    if not paths:
+        print("[bench-gate] selftest FAIL: no results.*.speedup metric")
+        return 1
+    _, group, leaf = paths[0].split(".")
+    injected["results"][group][leaf] *= 0.75        # 25% regression
+
+    with tempfile.TemporaryDirectory() as td:
+        tmp = Path(td)
+        (tmp / "BENCH_selection.json").write_text(json.dumps(injected))
+        print(f"\n[bench-gate] selftest: injected -25% into "
+              f"{paths[0]}; gate should fail")
+        rc = run_gate(baseline_dir, fresh_dir=tmp)
+    if rc == 0:
+        print("[bench-gate] selftest FAIL: injected regression not caught")
+        return 1
+    print("\n[bench-gate] selftest OK: clean pass + injected fail caught")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline-dir", type=Path, default=None,
+                    help="compare against this directory instead of "
+                         "git HEAD's committed artifacts")
+    ap.add_argument("--selftest", action="store_true",
+                    help="verify the gate catches an injected regression")
+    args = ap.parse_args(argv)
+    if args.selftest:
+        return selftest(args.baseline_dir)
+    return run_gate(args.baseline_dir)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
